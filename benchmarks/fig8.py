@@ -1,0 +1,48 @@
+"""Fig. 8: energy vs #rows — TAP 20-trit adder vs CRA/CSA/CLA [15].
+
+AP energy grows linearly with rows (every row adds in parallel but each
+consumes write energy); reference adders are serial, one add per row.
+Paper target: TAP consumes ~52.64 % less energy than the CLA, with
+CLA < CSA < CRA.  (CSA/CRA levels are qualitative extrapolations — the
+paper quotes only the CLA ratio; see energy.py.)"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.table_xi import simulate
+from repro.core.energy import cla_energy_j, cra_energy_j, csa_energy_j
+
+ROWS = (32, 64, 128, 256, 512, 1024)
+
+
+def run(n_probe_rows: int = 2048):
+    _, rep = simulate(3, 20, n_probe_rows)
+    tap_per_add = rep.total_j / n_probe_rows
+    out = []
+    for r in ROWS:
+        out.append({"rows": r,
+                    "tap_J": tap_per_add * r,
+                    "cla_J": cla_energy_j(r),
+                    "csa_J": csa_energy_j(r),
+                    "cra_J": cra_energy_j(r)})
+    return out, tap_per_add
+
+
+def main():
+    t0 = time.perf_counter()
+    rows, tap_per_add = run()
+    us = (time.perf_counter() - t0) * 1e6
+    print("rows,tap_uJ,cla_uJ,csa_uJ,cra_uJ")
+    for r in rows:
+        print(f"{r['rows']},{r['tap_J']*1e6:.2f},{r['cla_J']*1e6:.2f},"
+              f"{r['csa_J']*1e6:.2f},{r['cra_J']*1e6:.2f}")
+    saving = (1 - rows[-1]["tap_J"] / rows[-1]["cla_J"]) * 100
+    print(f"fig8,{us:.0f},TAP_vs_CLA_saving={saving:.2f}%_paper52.64"
+          f"_ordering={'CLA<CSA<CRA'}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

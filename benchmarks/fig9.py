@@ -1,0 +1,61 @@
+"""Fig. 9: delay vs #rows — non-blocked/blocked TAP, binary AP [6], CLA [15].
+
+AP delay is constant in #rows (row-parallel); CLA is serial.  Paper targets
+at 20 trits / 32 bits: blocked = 1.4x faster than non-blocked (1.2x with the
+optimized precharge-in-write scheme); at 512 rows CLA/non-blocked = 6.8x and
+CLA/blocked = 9.5x (~9x optimized); binary AP keeps a 2.3x edge over the
+(blocked) TAP.  Also reports the beyond-paper best-blocked schedule (8 write
+blocks vs the paper's 9 via the alternate cycle break)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import truth_tables as tt
+from repro.core.blocked import best_blocked_lut, build_lut_blocked
+from repro.core.energy import cla_delay_ns, lut_delay_ns
+from repro.core.nonblocked import build_lut_nonblocked
+
+ROWS = (16, 32, 64, 128, 256, 512, 1024)
+
+
+def run():
+    nb = build_lut_nonblocked(tt.full_adder(3))
+    bl = build_lut_blocked(tt.full_adder(3))
+    best, breaks = best_blocked_lut(tt.full_adder(3))
+    nb2 = build_lut_nonblocked(tt.full_adder(2))
+    d = {
+        "tap_nb": lut_delay_ns(nb, 20),
+        "tap_bl": lut_delay_ns(bl, 20),
+        "tap_best": lut_delay_ns(best, 20),
+        "tap_nb_opt": lut_delay_ns(nb, 20, optimized_precharge=True),
+        "tap_bl_opt": lut_delay_ns(bl, 20, optimized_precharge=True),
+        "binary_32b": lut_delay_ns(nb2, 32),
+        "breaks": {str(k): str(v) for k, v in breaks.items()},
+    }
+    table = [{"rows": r, "cla_ns": cla_delay_ns(r), **{k: v for k, v in
+              d.items() if k != "breaks"}} for r in ROWS]
+    return table, d
+
+
+def main():
+    t0 = time.perf_counter()
+    table, d = run()
+    us = (time.perf_counter() - t0) * 1e6
+    print("rows,cla_ns,tap_nb_ns,tap_bl_ns,tap_best_ns,binary32b_ns")
+    for r in table:
+        print(f"{r['rows']},{r['cla_ns']:.0f},{r['tap_nb']:.0f},"
+              f"{r['tap_bl']:.0f},{r['tap_best']:.0f},{r['binary_32b']:.0f}")
+    cla512 = cla_delay_ns(512)
+    print(f"fig9,{us:.0f},"
+          f"bl_speedup={d['tap_nb']/d['tap_bl']:.2f}x_paper1.4|"
+          f"cla/nb={cla512/d['tap_nb']:.1f}x_paper6.8|"
+          f"cla/bl={cla512/d['tap_bl']:.1f}x_paper9.5|"
+          f"binary_edge={d['tap_bl']/d['binary_32b']:.2f}x_paper2.3|"
+          f"opt_bl_speedup={d['tap_nb_opt']/d['tap_bl_opt']:.2f}x_paper1.2|"
+          f"cla/nb_opt={cla512/d['tap_nb_opt']:.2f}x_paper9|"
+          f"beyond_best_blocked={d['tap_bl']/d['tap_best']:.3f}x_vs_paper")
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Kernel-level benchmarks (CPU host: wall time from the jnp reference paths,
+structural HBM-traffic/bytes arithmetic for the TPU roofline story).
+
+1. tap_pass fusion: HBM bytes naive per-pass replay vs one fused VMEM pass
+   (the paper's in-memory property on TPU), + wall time of the jnp path.
+2. ternary_matmul: weight bytes bf16 vs 2-bit packed (8x) and wall time of
+   the fake-quant vs dense matmul on CPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ap, truth_tables as tt
+from repro.core.nonblocked import build_lut_nonblocked
+from repro.kernels.tap_pass.ops import hbm_traffic_model
+from repro.kernels.tap_pass.ref import apply_schedule, ripple_add_schedule
+from repro.kernels.ternary_matmul.ops import quantize_and_pack
+from repro.kernels.ternary_matmul.ref import ternary_matmul_ref
+
+
+def _time(fn, *args, n=5) -> float:
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_tap(rows: int = 8192, width: int = 20):
+    lut = build_lut_nonblocked(tt.full_adder(3))
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 3 ** width, rows)
+    b = rng.integers(0, 3 ** width, rows)
+    arr = jnp.asarray(ap.encode_operands(a, b, 3, width))
+    sched = ripple_add_schedule(lut, width, 2 * width)
+    f = jax.jit(lambda x: apply_schedule(x, sched))
+    us = _time(f, arr)
+    traffic = hbm_traffic_model(rows, 2 * width + 1, lut, width)
+    print(f"tap_fused_add_{rows}x{width}t,{us:.0f},"
+          f"hbm_reduction={traffic['reduction_x']:.1f}x")
+
+
+def bench_ternary(m: int = 256, k: int = 2048, n: int = 2048):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (k, n), jnp.float32) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k), jnp.float32)
+    packed, scale = quantize_and_pack(w)
+    f_t = jax.jit(lambda x, p, s: ternary_matmul_ref(x, p, s))
+    f_d = jax.jit(lambda x, w: x @ w)
+    us_t = _time(f_t, x, packed, scale)
+    us_d = _time(f_d, x, w)
+    bytes_bf16 = k * n * 2
+    bytes_packed = (k // 16) * n * 4
+    print(f"ternary_matmul_{m}x{k}x{n},{us_t:.0f},"
+          f"dense_us={us_d:.0f}_weightbytes_bf16/packed="
+          f"{bytes_bf16/bytes_packed:.0f}x")
+
+
+def main():
+    bench_tap()
+    bench_ternary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines (plus per-table CSV
+detail above each).  The dry-run/roofline artifacts live separately under
+experiments/ (produced by repro.launch.dryrun / repro.launch.roofline).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import fig6_7, fig8, fig9, kernels_bench, table_xi
+
+    print("=" * 72)
+    print("# Table XI — binary vs ternary AP adder (energy / sets / area)")
+    table_xi.main()
+    print("=" * 72)
+    print("# Fig 6/7 — QCAM dynamic range & compare energy design space")
+    fig6_7.main()
+    print("=" * 72)
+    print("# Fig 8 — energy vs #rows (TAP vs CRA/CSA/CLA)")
+    fig8.main()
+    print("=" * 72)
+    print("# Fig 9 — delay vs #rows (blocked / non-blocked / binary / CLA)")
+    fig9.main()
+    print("=" * 72)
+    print("# Kernels — fused tap_pass + packed ternary matmul")
+    kernels_bench.main()
+    print("=" * 72)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

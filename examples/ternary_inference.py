@@ -1,0 +1,52 @@
+"""Paper-technique serving path: balanced-ternary weight quantization.
+
+Quantizes a small dense LM's projection weights to packed 2-bit ternary
+(16 weights per int32 — the MvAP trit representation applied to LM serving),
+reports weight-memory savings and logits fidelity, and validates the packed
+Pallas-kernel path against the fake-quant model.
+
+Run:  PYTHONPATH=src python examples/ternary_inference.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.kernels.ternary_matmul.ops import quantize_and_pack
+from repro.kernels.ternary_matmul.ref import ternary_matmul_ref
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import model as M
+
+cfg = get_smoke_config("qwen3-0.6b").with_(n_layers=2)
+mesh = make_smoke_mesh()
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+batch = {"tokens": jnp.asarray(
+    np.random.default_rng(0).integers(0, cfg.vocab, (2, 32)), jnp.int32)}
+
+with mesh:
+    logits_fp = M.forward(cfg, params, batch, mesh)
+    cfg_t = cfg.with_(ternary=cfg.ternary.__class__(enabled=True))
+    logits_t = M.forward(cfg_t, params, batch, mesh)
+
+rel = float(jnp.linalg.norm(logits_fp - logits_t)
+            / jnp.linalg.norm(logits_fp))
+print(f"fake-quant ternary model: relative logits delta {rel:.3f} "
+      f"(untrained weights; QAT flag `ternary.qat` trains through STE)")
+
+# packed-kernel path equivalence on one projection
+w = params["stack"]["pos_0"]["mlp"]["w1"][0]
+packed, scale = quantize_and_pack(w)
+x = jax.random.normal(jax.random.PRNGKey(1), (8, w.shape[0]), jnp.float32)
+y_ref = ternary_matmul_ref(x, packed, scale)
+from repro.kernels.ternary_matmul.ops import ternary_matmul_op
+y_kern = ternary_matmul_op(x, packed, scale)
+print(f"packed kernel max err vs ref: "
+      f"{float(jnp.max(jnp.abs(y_kern - y_ref))):.2e}")
+
+n_proj = sum(p.size for path, p in
+             jax.tree_util.tree_flatten_with_path(params)[0]
+             if any("mlp" in str(k) or "attn" in str(k) for k in path))
+print(f"projection weights: {n_proj/1e6:.2f}M params -> "
+      f"bf16 {n_proj*2/1e6:.2f} MB vs packed ternary "
+      f"{n_proj*0.25/1e6:.2f} MB (8x smaller; decode is weight-bound, "
+      f"so the memory-roofline term drops ~8x on projections)")

@@ -1,0 +1,77 @@
+"""End-to-end training driver: train a ~100M-param qwen3-family model on a
+learnable synthetic language for a few hundred steps; loss must drop.
+
+Default invocation is CPU-sized (~3M params, 200 steps, minutes); pass
+--full-100m for the ~100M configuration the assignment describes (same code
+path, longer wall time on CPU).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--full-100m]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_smoke_mesh
+from repro.train.optimizer import AdamWCfg
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def synthetic_batch(step: int, vocab: int, batch: int, seq: int):
+    """Learnable affine token chain: t_{i+1} = (7 t_i + 3) mod vocab."""
+    rng = np.random.default_rng(step)
+    t0 = rng.integers(0, vocab, (batch, 1))
+    toks = [t0]
+    for _ in range(seq):
+        toks.append((7 * toks[-1] + 3) % vocab)
+    seq_all = np.concatenate(toks, axis=1)
+    return {"tokens": jnp.asarray(seq_all[:, :-1], jnp.int32),
+            "targets": jnp.asarray(seq_all[:, 1:], jnp.int32)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full-100m", action="store_true")
+    args = ap.parse_args()
+
+    if args.full_100m:
+        cfg = ModelConfig(name="repro-100m", family="dense", n_layers=12,
+                          d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+                          d_ff=2048, vocab=32768, qk_norm=True,
+                          tie_embeddings=True, remat="none")
+    else:
+        cfg = ModelConfig(name="repro-3m", family="dense", n_layers=4,
+                          d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+                          d_ff=512, vocab=512, qk_norm=True,
+                          tie_embeddings=True, remat="none")
+    print(f"model: {cfg.name} ({cfg.n_params/1e6:.1f}M params)")
+
+    mesh = make_smoke_mesh()
+    opt = AdamWCfg(lr=3e-3, warmup_steps=10, total_steps=args.steps,
+                   weight_decay=0.01)
+    with mesh:
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        step_fn = jax.jit(make_train_step(cfg, mesh, opt))
+        t0 = time.perf_counter()
+        first = last = None
+        for step in range(args.steps):
+            batch = synthetic_batch(step, cfg.vocab, args.batch, args.seq)
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            first = first if first is not None else loss
+            last = loss
+            if step % 20 == 0 or step == args.steps - 1:
+                print(f"step {step:4d} loss {loss:.4f} "
+                      f"({time.perf_counter()-t0:.1f}s)")
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'LEARNED' if last < first * 0.6 else 'check hyperparams'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro — In-memory Multi-valued Associative Processor (MvAP/TAP) framework.
+
+Layers:
+  core/     the paper's contribution (LUT compiler + MvAP functional simulator)
+  kernels/  Pallas TPU kernels (fused LUT passes, packed ternary matmul)
+  models/   assigned LM architectures (dense/MoE/SSM/hybrid/enc-dec/VLM/audio)
+  configs/  one config per assigned architecture + the paper's TAP setup
+  data/     token pipeline
+  train/    optimizer, train_step, checkpointing, gradient compression
+  serve/    prefill/decode engine
+  launch/   production mesh, multi-pod dry-run, roofline, drivers
+"""
+
+__version__ = "1.0.0"

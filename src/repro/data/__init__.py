@@ -1,0 +1,1 @@
+from .pipeline import DataCfg, Prefetcher, TokenSource  # noqa: F401

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+tap_pass        — fused MvAP LUT-schedule application: the full compare/write
+                  schedule executes on a row-block resident in VMEM (the
+                  TPU-native reading of the paper's "in-memory" property:
+                  one HBM read + one HBM write per block instead of
+                  2 x #passes round trips).
+ternary_matmul  — packed balanced-ternary (2-bit) weight matmul: weights held
+                  16-per-int32 in HBM, unpacked in VMEM, MXU matmul in fp32 —
+                  the serving-path memory-roofline optimization.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper) and ref.py (pure-jnp oracle used by the allclose tests).
+All kernels validate under ``interpret=True`` on CPU.
+"""
+from . import tap_pass, ternary_matmul  # noqa: F401

@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for the fused TAP LUT-schedule kernel.
+
+A *schedule* is the flattened, hardware-agnostic form of one or more LUT
+applications: a tuple of steps, each step being
+
+    (compare_cols, compare_key, write_cols, write_vals)   # one block
+
+where the compare is the OR over the (cols, key) pairs listed — i.e. a
+blocked LUT step carries several keys sharing one write action.  Don't-care
+stored digits (-1) match any key digit.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.lut import LUT
+
+DONT_CARE = -1
+
+# step = (keys, compare_cols, write_cols, write_vals)
+Step = tuple[tuple[tuple[int, ...], ...], tuple[int, ...],
+             tuple[int, ...], tuple[int, ...]]
+
+
+def schedule_from_lut(lut: LUT, col_map: tuple[int, ...]) -> tuple[Step, ...]:
+    """Flatten one LUT application into kernel steps (one per block)."""
+    steps = []
+    for blk in lut.blocks:
+        ccols = tuple(col_map[i] for i in range(lut.width))
+        keys = tuple(tuple(k) for k in blk.keys)
+        wcols = tuple(col_map[c] for c in blk.write_cols)
+        steps.append((keys, ccols, wcols, tuple(blk.write_vals)))
+    return tuple(steps)
+
+
+def ripple_add_schedule(lut: LUT, width: int, carry_col: int,
+                        a_base: int = 0, b_base: int | None = None
+                        ) -> tuple[Step, ...]:
+    """Full p-digit in-place add as a single fused schedule.
+
+    Includes the initial carry-zeroing write (empty key set = unconditional).
+    """
+    b_base = width if b_base is None else b_base
+    steps: list[Step] = [((), (), (carry_col,), (0,))]
+    for i in range(width):
+        steps.extend(schedule_from_lut(
+            lut, (a_base + i, b_base + i, carry_col)))
+    return tuple(steps)
+
+
+def apply_schedule(arr: jnp.ndarray, schedule: tuple[Step, ...]) -> jnp.ndarray:
+    """Reference replay of a schedule on [rows, cols] int8 digits."""
+    for keys, ccols, wcols, wvals in schedule:
+        if not keys:                                  # unconditional write
+            tag = jnp.ones(arr.shape[0], dtype=bool)
+        else:
+            tag = jnp.zeros(arr.shape[0], dtype=bool)
+            for key in keys:
+                m = jnp.ones(arr.shape[0], dtype=bool)
+                for c, k in zip(ccols, key):
+                    cell = arr[:, c]
+                    m &= (cell == k) | (cell == DONT_CARE)
+                tag |= m
+        new = arr
+        for c, v in zip(wcols, wvals):
+            new = new.at[:, c].set(
+                jnp.where(tag, jnp.int8(v), arr[:, c]))
+        arr = new
+    return arr

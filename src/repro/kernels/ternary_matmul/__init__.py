@@ -1,0 +1,4 @@
+from . import kernel, ops, ref
+from .ops import quantize_and_pack, ternary_matmul_op
+
+__all__ = ["kernel", "ops", "ref", "quantize_and_pack", "ternary_matmul_op"]

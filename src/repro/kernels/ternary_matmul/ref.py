@@ -1,0 +1,65 @@
+"""Pure-jnp oracle + pack/unpack helpers for the packed-ternary matmul.
+
+Balanced ternary weights w in {-1, 0, +1} are stored 16-per-int32 (2 bits
+each, value+1 in {0,1,2}), packed along the K (reduction) axis:
+
+    packed[k16, n] bits [2i, 2i+1] hold w[16*k16 + i, n] + 1
+
+A per-output-channel fp32 scale recovers magnitude:  y = (x @ w) * scale.
+This is the paper's unbalanced<->balanced ternary representation applied to
+LM weights (DESIGN.md §2): 16x fewer weight bytes than fp32, 8x fewer than
+bf16 — the decode-shape memory-roofline lever.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PACK = 16  # ternary digits per int32
+
+
+def pack_ternary(w_ter: jax.Array) -> jax.Array:
+    """[K, N] int8 in {-1,0,1}  ->  [K/16, N] int32 (K % 16 == 0)."""
+    k, n = w_ter.shape
+    if k % PACK:
+        raise ValueError(f"K={k} not a multiple of {PACK}")
+    u = (w_ter + 1).astype(jnp.uint32)                 # {0,1,2}
+    u = u.reshape(k // PACK, PACK, n)
+    shifts = (2 * jnp.arange(PACK, dtype=jnp.uint32))[None, :, None]
+    return jnp.sum(u << shifts, axis=1).astype(jnp.int32)
+
+
+def unpack_ternary(packed: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """[K/16, N] int32  ->  [K, N] dtype in {-1,0,1}."""
+    k16, n = packed.shape
+    u = packed.astype(jnp.uint32)
+    shifts = (2 * jnp.arange(PACK, dtype=jnp.uint32))[None, :, None]
+    digits = (u[:, None, :] >> shifts) & jnp.uint32(3)  # [K/16, 16, N]
+    return (digits.astype(jnp.int32) - 1).reshape(k16 * PACK, n).astype(dtype)
+
+
+def quantize_ternary(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """AbsMean ternarization (BitNet-style): per-output-channel scale.
+
+    Returns (w_ter int8 [K, N], scale fp32 [N]) with
+    dequant(w) ~= w_ter * scale.
+    """
+    scale = jnp.mean(jnp.abs(w), axis=0)               # [N]
+    scale = jnp.maximum(scale, 1e-8)
+    w_ter = jnp.clip(jnp.round(w / scale[None, :]), -1, 1).astype(jnp.int8)
+    return w_ter, scale.astype(jnp.float32)
+
+
+def ternary_matmul_ref(x: jax.Array, packed: jax.Array,
+                       scale: jax.Array) -> jax.Array:
+    """Oracle: y[M, N] = (x[M, K] @ unpack(packed)[K', N]) * scale[N].
+
+    K may be smaller than the packed K' (= ceil(K/16)*16): the pack step
+    zero-quantizes the padding rows, so x is zero-padded to match."""
+    w = unpack_ternary(packed, dtype=jnp.float32)
+    kp = w.shape[0]
+    if x.shape[1] < kp:
+        x = jnp.pad(x, ((0, 0), (0, kp - x.shape[1])))
+    y = jnp.dot(x.astype(jnp.float32), w,
+                preferred_element_type=jnp.float32)
+    return (y * scale[None, :]).astype(x.dtype)

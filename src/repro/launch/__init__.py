@@ -1,0 +1,2 @@
+from . import mesh  # noqa: F401  (dryrun/roofline import jax-state-touching
+#                     code and are invoked as __main__ modules)

@@ -1,0 +1,58 @@
+"""Production mesh factory (FUNCTION, not module constant — importing this
+module never touches jax device state).
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis composes with "data" for batch/DP sharding (DCN between pods,
+ICI within), which is exactly what the multi-pod dry-run must prove shards.
+
+Elastic scaling: ``make_elastic_mesh`` builds the largest (data, model) mesh
+from whatever devices exist at boot (model dim capped at MAX_TP), so a
+restart after losing nodes re-enters training on the shrunken fleet and
+checkpoint restore reshards onto it.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+MAX_TP = 16
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for {shape}, have {len(devices)} — the dry-run "
+            f"sets XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    import numpy as np
+    dev_array = np.array(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with all three axes (CPU tests)."""
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1, 1),
+        ("pod", "data", "model"))
+
+
+def make_elastic_mesh(devices=None):
+    """Largest (data, model) mesh from the available devices."""
+    import numpy as np
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    tp = math.gcd(n, MAX_TP)
+    dp = n // tp
+    return jax.sharding.Mesh(
+        np.array(devices[: dp * tp]).reshape(dp, tp), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Batch/DP axes present in this mesh ("pod" folds in when it exists)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,126 @@
+"""Assemble the data-driven sections of EXPERIMENTS.md from the artifacts.
+
+Usage: PYTHONPATH=src python -m repro.launch.report > experiments/report.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from ..configs.shapes import SHAPES
+from .roofline import DIR, analyze
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tag: str = "") -> dict:
+    out = {}
+    for fn in sorted(os.listdir(DIR)):
+        if not fn.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(DIR, fn)))
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        out[(r["arch"], r["shape"])] = analyze(
+            r, 512 if mesh == "2x16x16" else 256, SHAPES)
+    return out
+
+
+def fmt_b(x) -> str:
+    if x is None:
+        return "-"
+    return f"{x/1e9:.2f}"
+
+
+def dryrun_table() -> str:
+    single = load("16x16")
+    multi = load("2x16x16")
+    lines = ["| arch | shape | 16x16 (256) | 2x16x16 (512) | per-chip temp GB"
+             " | per-chip args GB | HLO GFLOPs/chip | collective GB/chip |",
+             "|---|---|---|---|---|---|---|---|"]
+    archs = sorted({a for a, _ in set(single) | set(multi)})
+    for a in archs:
+        for sh in ORDER:
+            s = single.get((a, sh))
+            m = multi.get((a, sh))
+            if s is None and m is None:
+                continue
+            r = s or m
+
+            def st(x):
+                if x is None:
+                    return "missing"
+                if x["status"] == "skipped":
+                    return "skip (full-attn)"
+                return "OK" if x["status"] == "ok" else x["status"]
+
+            if r["status"] != "ok":
+                lines.append(f"| {a} | {sh} | {st(s)} | {st(m)} | - | - |"
+                             f" - | - |")
+                continue
+            mem = r.get("memory", {})
+            lines.append(
+                f"| {a} | {sh} | {st(s)} | {st(m)} "
+                f"| {fmt_b(mem.get('temp_bytes'))} "
+                f"| {fmt_b(mem.get('argument_bytes'))} "
+                f"| {r.get('flops', 0)/1e9:.0f} "
+                f"| {r.get('collectives', {}).get('total', 0)/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    single = load("16x16")
+    lines = ["| arch | shape | compute s | memory s | collective s |"
+             " dominant | MODEL/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (a, sh) in sorted(single):
+        r = single[(a, sh)]
+        if r["status"] != "ok":
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {a} | {sh} | {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {r['dominant'].replace('_s','')} "
+            f"| {(r['model_to_hlo_flops'] or 0):.3f} "
+            f"| {(r['roofline_fraction'] or 0):.4f} |")
+    return "\n".join(lines)
+
+
+def perf_table() -> str:
+    rows = []
+    for fn in sorted(os.listdir(DIR)):
+        if not fn.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(DIR, fn)))
+        if r.get("mesh") != "16x16" or r.get("status") != "ok":
+            continue
+        tag = r.get("tag", "") or "baseline"
+        key = (r["arch"], r["shape"])
+        if key in {("qwen3-0.6b", "train_4k"), ("yi-34b", "train_4k"),
+                   ("qwen3-moe-30b-a3b", "train_4k")}:
+            a = analyze(r, 256, SHAPES)
+            rows.append((r["arch"], tag, a))
+    lines = ["| arch | variant | compute s | memory s | collective s |"
+             " MODEL/HLO | temp GB |",
+             "|---|---|---|---|---|---|---|"]
+    for arch, tag, a in rows:
+        t = a["terms"]
+        mem = a.get("memory", {})
+        lines.append(
+            f"| {arch} | {tag} | {t['compute_s']:.4f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.4f} | {(a['model_to_hlo_flops'] or 0):.3f}"
+            f" | {fmt_b(mem.get('temp_bytes'))} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## §Dry-run (both meshes)\n")
+    print(dryrun_table())
+    print("\n## §Roofline (single pod, 256 chips)\n")
+    print(roofline_table())
+    print("\n## §Perf variants (hillclimb cells)\n")
+    print(perf_table())
+
+
+if __name__ == "__main__":
+    main()

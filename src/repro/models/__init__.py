@@ -1,0 +1,1 @@
+from . import attention, blocks, common, mlp, model, moe, ssm  # noqa: F401

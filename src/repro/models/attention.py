@@ -1,0 +1,200 @@
+"""Attention: GQA with qk-norm / qkv-bias / sliding-window / cross-attn.
+
+Three execution paths:
+  * ``attend_blockwise`` — flash-style online-softmax over KV blocks (pure
+    jnp + lax.scan) so 32k-token prefill never materializes an [S, S] score
+    tensor; q is chunked too, keeping per-step workspace O(bq * bk).
+  * ``attend_decode`` — one new token against a KV cache (ring buffer for
+    sliding-window layers, linear buffer for global layers).
+  * dense path for tiny smoke shapes (S <= 512) where blocking is overhead.
+
+Weights layout: wq [d, H*hd], wk/wv [d, Hk*hd], wo [H*hd, d] — the H*hd dim
+is TP-sharded over "model" (see common.spec rules).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qk_norm: bool, qkv_bias: bool,
+                   dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), 0, dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv_heads * head_dim), 0, dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv_heads * head_dim), 0, dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), 0, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def project_qkv(p: dict, x: jax.Array, n_heads: int, n_kv_heads: int,
+                head_dim: int, positions: jax.Array, rope_theta: float,
+                norm_eps: float, use_rope: bool = True):
+    """x [B, S, d] -> q [B, S, H, hd], k/v [B, S, Hk, hd] (rope applied)."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"])
+    k = (x @ p["wk"])
+    v = (x @ p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv_heads, head_dim)
+    v = v.reshape(b, s, n_kv_heads, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], norm_eps)
+        k = rms_norm(k, p["k_norm"], norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, hk, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hk, n_rep, hd)
+                            ).reshape(b, s, hk * n_rep, hd)
+
+
+# ---------------------------------------------------------------------------
+# Dense path (short sequences / smoke tests / cross-attention)
+# ---------------------------------------------------------------------------
+
+def attend_dense(q, k, v, causal: bool, window: int = 0,
+                 q_offset: int = 0) -> jax.Array:
+    """q [B,Sq,H,hd], k/v [B,Sk,Hk,hd] -> [B,Sq,H,hd]."""
+    n_rep = q.shape[2] // k.shape[2]
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) path for long prefill / training
+# ---------------------------------------------------------------------------
+
+def attend_blockwise(q, k, v, causal: bool = True, window: int = 0,
+                     block_q: int = 1024, block_k: int = 1024,
+                     unroll: bool = False) -> jax.Array:
+    """Online-softmax attention; never materializes [Sq, Sk].
+
+    Requires Sq % block_q == Sk % block_k == 0 (configs keep shapes aligned).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    n_rep = h // k.shape[2]
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    nq, nk = sq // block_q, sk // block_k
+    scale = hd ** -0.5
+
+    qb = q.reshape(b, nq, block_q, h, hd)
+    kb = k.reshape(b, nk, block_k, h, hd)
+    vb = v.reshape(b, nk, block_k, h, hd)
+
+    def q_step(_, qi):
+        q_idx, q_blk = qi                                  # [], [b,bq,h,hd]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_idx, k_blk, v_blk = ki
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk) * scale
+            qpos = q_idx * block_q + jnp.arange(block_q)
+            kpos = k_idx * block_k + jnp.arange(block_k)
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None], s.astype(jnp.float32), NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bhqk,bkhd->bhqd", p,
+                                    v_blk.astype(jnp.float32)))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        a0 = jnp.zeros((b, h, block_q, hd), jnp.float32)
+        ks = (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), ks,
+                                      unroll=nk if unroll else 1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, jnp.moveaxis(out, 1, 2)               # [b,bq,h,hd]
+
+    qs = (jnp.arange(nq), jnp.moveaxis(qb, 1, 0))
+    _, out = jax.lax.scan(q_step, None, qs,
+                          unroll=nq if unroll else 1)    # [nq,b,bq,h,hd]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, n_kv_heads: int, head_dim: int, length: int,
+                  dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, length, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, length, n_kv_heads, head_dim), dtype),
+    }
+
+
+def decode_update_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                        pos: jax.Array, ring: bool) -> dict:
+    """Insert one token's k/v at position `pos` (mod length if ring)."""
+    length = cache["k"].shape[1]
+    slot = pos % length if ring else jnp.minimum(pos, length - 1)
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype),
+        (0, slot.astype(jnp.int32), 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype),
+        (0, slot.astype(jnp.int32), 0, 0))
+    return {"k": k, "v": v}
+
+
+def attend_decode(q, cache: dict, pos: jax.Array, ring: bool) -> jax.Array:
+    """q [B,1,H,hd] against the cache; masks unwritten slots."""
+    k, v = cache["k"], cache["v"]
+    length = k.shape[1]
+    n_rep = q.shape[2] // k.shape[2]
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid_len = jnp.minimum(pos + 1, length) if ring else pos + 1
+    mask = jnp.arange(length)[None, None, None, :] < valid_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

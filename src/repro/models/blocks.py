@@ -1,0 +1,182 @@
+"""Decoder/encoder block assembly: pre-norm mixer + pre-norm FFN.
+
+A block is parameterized by (mixer_kind, ffn_kind):
+  mixer: "attn" (full causal) | "local" (sliding window) | "mamba"
+  ffn:   "mlp" | "moe"
+Encoder blocks use bidirectional attention; decoder blocks of enc-dec models
+additionally carry a cross-attention sub-block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import rms_norm
+
+DENSE_ATTN_MAX = 512        # below this, skip blockwise machinery
+
+
+def init_block(key, cfg: ModelConfig, mixer_kind: str, ffn_kind: str,
+               cross: bool = False, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": jnp.ones((cfg.d_model,), dtype),
+               "norm2": jnp.ones((cfg.d_model,), dtype)}
+    if mixer_kind == "mamba":
+        p["mamba"] = ssm_mod.init_mamba(ks[0], cfg.d_model, cfg.ssm, dtype)
+    else:
+        p["attn"] = attn.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            cfg.qk_norm, cfg.qkv_bias, dtype)
+    if ffn_kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.moe, dtype)
+    elif ffn_kind == "mlp":
+        p["mlp"] = mlp_mod.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    else:                                   # "none": mixer-only block (mamba2)
+        p.pop("norm2")
+    if cross:
+        p["cross"] = attn.init_attention(
+            ks[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            False, False, dtype)
+        p["norm_cross"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _rope_theta(cfg: ModelConfig, mixer_kind: str) -> float:
+    if mixer_kind == "attn" and getattr(cfg, "rope_theta_global", 0.0):
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _batch_split_spec(mesh):
+    from jax.sharding import PartitionSpec as P
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    return P(axes, None, None, None)
+
+
+def _mixer_forward(p, x, cfg: ModelConfig, mixer_kind: str,
+                   positions, causal: bool, mesh=None) -> jax.Array:
+    if mixer_kind == "mamba":
+        return ssm_mod.mamba_forward(p["mamba"], x, cfg.ssm, cfg.d_model,
+                                     cfg.norm_eps, unroll=cfg.probe_unroll)
+    window = cfg.sliding_window if mixer_kind == "local" else 0
+    q, k, v = attn.project_qkv(
+        p["attn"], x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+        positions, _rope_theta(cfg, mixer_kind), cfg.norm_eps,
+        use_rope=cfg.use_rope)
+    if cfg.attn_batch_split and mesh is not None and x.ndim == 3             and x.shape[1] > 1:
+        spec = _batch_split_spec(mesh)
+        q = jax.lax.with_sharding_constraint(q, spec)
+        k = jax.lax.with_sharding_constraint(k, spec)
+        v = jax.lax.with_sharding_constraint(v, spec)
+    s = x.shape[1]
+    if s <= DENSE_ATTN_MAX:
+        o = attn.attend_dense(q, k, v, causal=causal, window=window)
+    elif cfg.probe_unroll:
+        # dry-run cost probe: same blockwise math, scans fully unrolled so
+        # XLA cost analysis counts every block (bigger blocks keep HLO small)
+        bq = s // max(1, s // 8192)
+        o = attn.attend_blockwise(q, k, v, causal=causal, window=window,
+                                  block_q=bq, block_k=bq, unroll=True)
+    else:
+        o = attn.attend_blockwise(q, k, v, causal=causal, window=window)
+    b = x.shape[0]
+    return o.reshape(b, s, -1) @ p["attn"]["wo"]
+
+
+def _ffn_forward(p, x, cfg: ModelConfig, ffn_kind: str, mesh) -> jax.Array:
+    if ffn_kind == "moe":
+        return moe_mod.moe_ffn(p["moe"], x, cfg.moe, cfg.act, mesh)
+    return mlp_mod.mlp(p["mlp"], x, cfg.act,
+                       ternary=cfg.ternary.enabled or cfg.ternary.qat,
+                       qat=cfg.ternary.qat)
+
+
+def block_forward(p: dict, x: jax.Array, cfg: ModelConfig, mixer_kind: str,
+                  ffn_kind: str, positions, mesh, causal: bool = True,
+                  enc_out: jax.Array | None = None) -> jax.Array:
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    x = x + _mixer_forward(p, h, cfg, mixer_kind, positions, causal,
+                           mesh=mesh)
+    if enc_out is not None and "cross" in p:
+        h = rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        q, _, _ = attn.project_qkv(
+            p["cross"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            positions, cfg.rope_theta, cfg.norm_eps, use_rope=False)
+        ek = (enc_out @ p["cross"]["wk"]).reshape(
+            *enc_out.shape[:2], cfg.n_kv_heads, cfg.head_dim_)
+        ev = (enc_out @ p["cross"]["wv"]).reshape(
+            *enc_out.shape[:2], cfg.n_kv_heads, cfg.head_dim_)
+        o = attn.attend_dense(q, ek, ev, causal=False)
+        x = x + o.reshape(*x.shape[:2], -1) @ p["cross"]["wo"]
+    if ffn_kind == "none":
+        return x
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    return x + _ffn_forward(p, h, cfg, ffn_kind, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Cache init / prefill extraction / decode
+# ---------------------------------------------------------------------------
+
+def cache_length(cfg: ModelConfig, mixer_kind: str, seq_len: int) -> int:
+    if mixer_kind == "local" and cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_block_cache(cfg: ModelConfig, mixer_kind: str, batch: int,
+                     seq_len: int, cross_len: int = 0,
+                     dtype=jnp.bfloat16) -> dict:
+    c: dict = {}
+    if mixer_kind == "mamba":
+        c["mamba"] = ssm_mod.init_mamba_cache(batch, cfg.d_model, cfg.ssm)
+    else:
+        c["kv"] = attn.init_kv_cache(
+            batch, cfg.n_kv_heads, cfg.head_dim_,
+            cache_length(cfg, mixer_kind, seq_len), dtype)
+    if cross_len:
+        c["cross_kv"] = attn.init_kv_cache(
+            batch, cfg.n_kv_heads, cfg.head_dim_, cross_len, dtype)
+    return c
+
+
+def block_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
+                 mixer_kind: str, ffn_kind: str, pos, mesh,
+                 cache_dtype=jnp.bfloat16) -> tuple[jax.Array, dict]:
+    """One-token step.  x [B, 1, d]; pos scalar int32."""
+    new_cache = dict(cache)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer_kind == "mamba":
+        o, new_cache["mamba"] = ssm_mod.mamba_decode_step(
+            p["mamba"], h, cache["mamba"], cfg.ssm, cfg.d_model, cfg.norm_eps)
+        x = x + o
+    else:
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q, k, v = attn.project_qkv(
+            p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            positions, _rope_theta(cfg, mixer_kind), cfg.norm_eps,
+            use_rope=cfg.use_rope)
+        ring = mixer_kind == "local"     # window caches are ring buffers
+        new_cache["kv"] = attn.decode_update_cache(cache["kv"], k, v, pos,
+                                                   ring=ring)
+        o = attn.attend_decode(q, new_cache["kv"], pos, ring=ring)
+        x = x + o.reshape(x.shape[0], 1, -1) @ p["attn"]["wo"]
+    if "cross_kv" in cache and "cross" in p:
+        h = rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q, _, _ = attn.project_qkv(
+            p["cross"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            positions, cfg.rope_theta, cfg.norm_eps, use_rope=False)
+        clen = cache["cross_kv"]["k"].shape[1]
+        o = attn.attend_decode(q, cache["cross_kv"],
+                               jnp.int32(clen - 1), ring=False)
+        x = x + o.reshape(x.shape[0], 1, -1) @ p["cross"]["wo"]
+    if ffn_kind != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + _ffn_forward(p, h, cfg, ffn_kind, mesh)
+    return x, new_cache

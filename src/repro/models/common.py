@@ -1,0 +1,181 @@
+"""Shared model primitives: norms, RoPE, inits, partition rules.
+
+Parameters are plain nested dicts of jax.Arrays.  Sharding is path-based:
+:func:`partition_spec_tree` walks the param pytree and assigns a
+PartitionSpec from the leaf's path + shape, implementing FSDP("data") x
+TP("model") with the "pod" axis folded into data-parallel batch sharding.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = dict
+
+DATA_AXES = ("pod", "data")        # batch / FSDP dims (pod folds into DP)
+MODEL_AXIS = "model"               # TP dim
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    std = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, hd]; positions [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)         # [..., S, 1, hd/2]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Path-based partition rules (FSDP x TP)
+# ---------------------------------------------------------------------------
+
+# Each rule: (regex over "/"-joined param path, spec builder given leaf ndim).
+# Stacked scan params carry a leading "layers" axis -> spec gets a None
+# prepended (detected via the path containing "stack").
+_RULES: list[tuple[str, tuple]] = [
+    # embeddings / lm head: vocab over model (vocab-parallel logits)
+    (r"embed/table$",            ("model", "data")),
+    (r"lm_head/w$",              ("data", "model")),   # [d, V]
+    # attention projections
+    (r"attn.*/wq$",              ("data", "model")),   # [d, H*hd]
+    (r"attn.*/wk$",              ("data", "model")),
+    (r"attn.*/wv$",              ("data", "model")),
+    (r"attn.*/wo$",              ("model", "data")),   # [H*hd, d]
+    (r"attn.*/bq$",              ("model",)),
+    (r"attn.*/bk$",              ("model",)),
+    (r"attn.*/bv$",              ("model",)),
+    (r"attn.*/(q_norm|k_norm)$", (None,)),
+    # dense mlp (+ packed ternary serving forms)
+    (r"mlp/w1$",                 ("data", "model")),
+    (r"mlp/w3$",                 ("data", "model")),
+    (r"mlp/w2$",                 ("model", "data")),
+    (r"mlp/w[13]_packed$",       ("data", "model")),
+    (r"mlp/w2_packed$",          ("model", "data")),
+    (r"mlp/w[13]_scale$",        ("model",)),
+    (r"mlp/w2_scale$",           ("data",)),
+    # moe: experts replicated (tp variant) / sharded (ep); ff over model
+    (r"moe/router$",             ("data", None)),
+    (r"moe/w1$",                 (None, "data", "model")),
+    (r"moe/w3$",                 (None, "data", "model")),
+    (r"moe/w2$",                 (None, "model", "data")),
+    # mamba2
+    (r"mamba/in_proj$",          ("data", "model")),
+    (r"mamba/out_proj$",         ("model", "data")),
+    (r"mamba/conv_w$",           (None, "model")),
+    (r"mamba/(a_log|d_skip)$",   ("model",)),
+    (r"mamba/dt_bias$",          ("model",)),
+    (r"mamba/norm$",             ("model",)),
+    # norms and small vectors: replicated
+    (r".*",                      None),
+]
+
+
+def spec_for_path(path: str, ndim: int, ep: bool = False) -> P:
+    for pattern, axes in _RULES:
+        if re.search(pattern, path):
+            if axes is None:
+                spec_axes: list = [None] * ndim
+            else:
+                spec_axes = list(axes) + [None] * (ndim - len(axes))
+                spec_axes = spec_axes[:ndim]
+            if ep and "moe/w" in path:
+                # expert-parallel variant: shard experts over model,
+                # keep ff unsharded (each expert whole on its shard)
+                spec_axes = ["model"] + [None] * (ndim - 1)
+            if "stack" in path:
+                # leading layer-stack axis is never sharded
+                spec_axes = [None] + spec_axes[: ndim - 1]
+            return P(*spec_axes)
+    return P()
+
+
+def partition_spec_tree(params: Params, ep: bool = False, mesh=None):
+    """Specs per path rules; with ``mesh`` given, axes that do not divide
+    the corresponding dim evenly are dropped (replicated) — e.g. mamba2's
+    vocab=50280 is not divisible by model=16, so its table stays unsharded
+    on that dim."""
+    sizes = dict(mesh.shape) if mesh is not None else {}
+
+    def f(path, leaf):
+        keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+        spec = spec_for_path(keys, ndim, ep=ep)
+        if not sizes:
+            return spec
+        shape = leaf.shape
+        axes = list(spec) + [None] * (ndim - len(spec))
+        out = []
+        for dim, ax in zip(shape, axes):
+            if ax is None:
+                out.append(None)
+                continue
+            names = ax if isinstance(ax, tuple) else (ax,)
+            total = 1
+            for nm in names:
+                total *= sizes.get(nm, 1)
+            out.append(ax if dim % total == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def mesh_data_axes(mesh) -> tuple[str, ...]:
+    """Batch/DP axes present in this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh) -> P:
+    return P(mesh_data_axes(mesh))
+
+
+def activation_spec(mesh) -> P:
+    return P(mesh_data_axes(mesh), None, None)

@@ -1,0 +1,54 @@
+"""Dense SwiGLU MLP + the ternary-quantized linear path (paper technique).
+
+The ternary path (TernaryCfg.enabled / qat) implements DESIGN.md §2:
+balanced-ternary weights with per-channel absmean scale.  During training the
+straight-through estimator keeps full-precision master weights; at serve time
+weights are packed 16-per-int32 (kernels/ternary_matmul) — here the jnp
+fake-quant form is used so the whole model stays lowerable on any backend,
+with the Pallas kernel validated separately as the TPU execution path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ternary_matmul.ref import quantize_ternary
+from .common import act_fn, dense_init
+
+
+def ternary_linear(x: jax.Array, w: jax.Array, qat: bool) -> jax.Array:
+    """y = x @ ternarize(w), STE in training (qat) or fake-quant inference."""
+    w_ter, scale = quantize_ternary(w.astype(jnp.float32))
+    w_q = (w_ter.astype(jnp.float32) * scale[None, :]).astype(w.dtype)
+    if qat:
+        # straight-through: forward w_q, gradient flows to w
+        w_q = w + jax.lax.stop_gradient(w_q - w)
+    return x @ w_q
+
+
+def linear(x: jax.Array, w: jax.Array, ternary: bool = False,
+           qat: bool = False) -> jax.Array:
+    if ternary:
+        return ternary_linear(x, w, qat)
+    return x @ w
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (d_model, d_ff), 0, dtype),   # gate
+        "w3": dense_init(k2, (d_model, d_ff), 0, dtype),   # up
+        "w2": dense_init(k3, (d_ff, d_model), 0, dtype),   # down
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu", ternary: bool = False,
+        qat: bool = False) -> jax.Array:
+    if "w1_packed" in p:                     # packed ternary serving weights
+        from .quant import unpack_matmul
+        h = act_fn(act)(unpack_matmul(x, p["w1_packed"], p["w1_scale"])) \
+            * unpack_matmul(x, p["w3_packed"], p["w3_scale"])
+        return unpack_matmul(h, p["w2_packed"], p["w2_scale"])
+    h = act_fn(act)(linear(x, p["w1"], ternary, qat)) \
+        * linear(x, p["w3"], ternary, qat)
+    return linear(h, p["w2"], ternary, qat)

@@ -1,0 +1,77 @@
+"""Packed balanced-ternary serving weights (the paper technique, in-graph).
+
+Converts trained MLP projection weights to the 16-per-int32 packed form
+(kernels/ternary_matmul layout) so the *serving* graph holds 2-bit weights
+in HBM: w [K, N] float -> {w_packed [K/16, N] int32, w_scale [N] fp32}.
+`models.mlp.mlp()` detects the packed form and unpacks in-graph (pure jnp:
+shift/mask VPU work) before the matmul, so decode/serve lowers on any
+backend and the dry-run measures the 8x-vs-bf16 weight-byte reduction in
+its memory-roofline term.  On TPU the Pallas kernel
+(kernels/ternary_matmul) replaces unpack+matmul with the fused VMEM tiles.
+
+Stacked (scan-over-layers) params convert via vmap.  Embedding / attention
+tables are left in full precision by default (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ternary_matmul.ref import (PACK, pack_ternary,
+                                          quantize_ternary)
+
+MLP_KEYS = ("w1", "w3", "w2")
+
+
+def _pack_one(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k = w.shape[0]
+    pad = (-k) % PACK
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    w_ter, scale = quantize_ternary(w.astype(jnp.float32))
+    if pad:
+        w_ter = w_ter.at[k:].set(0)
+    return pack_ternary(w_ter), scale
+
+
+def pack_mlp_params(mlp: dict) -> dict:
+    """{w1, w3, w2} -> {w1_packed, w1_scale, ...} (handles stacked leaves)."""
+    out = {}
+    for key in MLP_KEYS:
+        w = mlp[key]
+        if w.ndim == 3:                      # stacked [n_sb, K, N]
+            packed, scale = jax.vmap(_pack_one)(w)
+        else:
+            packed, scale = _pack_one(w)
+        out[f"{key}_packed"] = packed
+        out[f"{key}_scale"] = scale
+    return out
+
+
+def unpack_matmul(x: jax.Array, packed: jax.Array,
+                  scale: jax.Array) -> jax.Array:
+    """In-graph y = (x @ unpack(packed)) * scale; x K-dim may be < K'."""
+    k16, n = packed.shape
+    u = packed.astype(jnp.uint32)
+    shifts = (2 * jnp.arange(PACK, dtype=jnp.uint32))[None, :, None]
+    digits = (u[:, None, :] >> shifts) & jnp.uint32(3)
+    w = (digits.astype(jnp.int8) - 1).reshape(k16 * PACK, n).astype(x.dtype)
+    if x.shape[-1] < k16 * PACK:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, k16 * PACK - x.shape[-1])]
+        x = jnp.pad(x, pad)
+    return (x @ w) * scale.astype(x.dtype)
+
+
+def quantize_model_params(params: dict) -> dict:
+    """Walk the param tree, replacing every 'mlp' subtree with packed form."""
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "mlp" and isinstance(v, dict) and "w1" in v:
+                    out[k] = pack_mlp_params(v)
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+    return walk(params)

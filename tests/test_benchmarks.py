@@ -1,0 +1,46 @@
+"""Benchmark modules reproduce the paper's headline numbers (small n_rows
+for CI speed; benchmarks.run uses the full sizes)."""
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, ".")
+
+
+def test_table_xi_reductions():
+    from benchmarks.table_xi import derived, run
+    rows = [r for r in run(n_rows=512)]
+    d = derived(rows)
+    assert d["energy_reduction_pct"] == pytest.approx(12.25, abs=1.5)
+    assert d["setreset_reduction_pct"] == pytest.approx(12.6, abs=1.5)
+    assert d["area_reduction_pct"] == pytest.approx(6.2, abs=1.0)
+
+
+def test_fig8_cla_saving():
+    from benchmarks.fig8 import run
+    rows, tap_per_add = run(n_probe_rows=512)
+    saving = 1 - rows[-1]["tap_J"] / rows[-1]["cla_J"]
+    assert saving == pytest.approx(0.5264, abs=0.02)
+    # linear in rows
+    assert rows[-1]["tap_J"] / rows[0]["tap_J"] == pytest.approx(
+        rows[-1]["rows"] / rows[0]["rows"], rel=1e-6)
+
+
+def test_fig9_ratios():
+    from benchmarks.fig9 import run
+    table, d = run()
+    assert d["tap_nb"] / d["tap_bl"] == pytest.approx(1.4, abs=0.01)
+    assert d["tap_bl"] / d["binary_32b"] == pytest.approx(2.34, abs=0.02)
+    assert d["tap_best"] < d["tap_bl"]            # beyond-paper schedule
+    cla512 = [r["cla_ns"] for r in table if r["rows"] == 512][0]
+    assert cla512 / d["tap_nb"] == pytest.approx(6.8, abs=0.1)
+    assert cla512 / d["tap_bl"] == pytest.approx(9.5, abs=0.1)
+
+
+def test_fig6_7_trends():
+    from benchmarks.fig6_7 import run
+    sw = run()
+    # best DR at lowest R_L / highest alpha; energies ordered by mismatches
+    assert sw["dr"][0, -1] == sw["dr"].max()
+    assert (np.diff(sw["energy"][0, -1]) > 0).all()

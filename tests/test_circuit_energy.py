@@ -1,0 +1,64 @@
+"""Circuit (Fig 6/7) and energy/area (Table XI) model tests."""
+import numpy as np
+import pytest
+
+from repro.core.circuit import (CellParams, compare_energy_table,
+                                design_space_sweep, dynamic_range,
+                                matchline_voltage)
+from repro.core.energy import (EQUIV_WIDTHS, cla_delay_ns, cla_energy_j,
+                               row_area_units)
+
+
+def test_matchline_ordering():
+    p = CellParams()
+    v = [matchline_voltage(p, 3, m) for m in range(4)]
+    assert v[0] > v[1] > v[2] > v[3]               # fm keeps the most charge
+
+
+def test_dynamic_range_design_point():
+    p = CellParams()                               # R_L=20k, alpha=50
+    dr = dynamic_range(p)
+    assert 0.18 < dr < 0.28                        # paper ~240 mV
+
+
+def test_dr_maximal_at_lowest_rl():
+    sw = design_space_sweep()
+    assert (sw["dr"][0] >= sw["dr"][-1]).all()     # 20k beats 100k
+    # DR increases with alpha at fixed R_L
+    assert (np.diff(sw["dr"][0]) > 0).all()
+
+
+def test_compare_energy_alpha_sensitivity():
+    """Paper §VI.A: at R_L=20k, alpha 10->50: E_fm drops hard (-71.6%),
+    E_3mm barely (-4.4%)."""
+    e10 = compare_energy_table(CellParams(alpha=10.0), 3)
+    e50 = compare_energy_table(CellParams(alpha=50.0), 3)
+    fm_drop = 1 - e50[0] / e10[0]
+    mm3_drop = 1 - e50[3] / e10[3]
+    assert fm_drop > 0.5
+    assert mm3_drop < 0.1
+    assert (e50 <= e10 + 1e-20).all()
+    # energies increase with mismatch count
+    assert (np.diff(e50) > 0).all()
+
+
+def test_area_table_xi():
+    areas = {p: row_area_units(p, 3) for p in EQUIV_WIDTHS}
+    assert row_area_units(32, 2) == 64             # 32b -> 64x
+    assert round(areas[20]) == 60                  # 20t -> 60x
+    reductions = [(row_area_units(q, 2) - row_area_units(p, 3))
+                  / row_area_units(q, 2) for p, q in EQUIV_WIDTHS.items()]
+    assert np.mean(reductions) == pytest.approx(0.062, abs=0.01)
+
+
+def test_cla_calibration():
+    """CLA constants reproduce the quoted ratios at 512 rows / 20 trits."""
+    from repro.core import truth_tables as tt
+    from repro.core.energy import lut_delay_ns
+    from repro.core.nonblocked import build_lut_nonblocked
+    nb = build_lut_nonblocked(tt.full_adder(3))
+    assert cla_delay_ns(512) / lut_delay_ns(nb, 20) == pytest.approx(
+        6.8, abs=0.05)
+    # energy: 42.06 nJ/add vs CLA per-add -> 52.64%
+    assert 1 - 42.06e-9 / (cla_energy_j(1)) == pytest.approx(0.5264,
+                                                             abs=0.01)

@@ -1,0 +1,86 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ap, build_lut_blocked, build_lut_nonblocked
+from repro.core import truth_tables as tt
+from repro.kernels.tap_pass import tap_apply_lut, tap_ripple_add
+from repro.kernels.tap_pass.ref import apply_schedule, ripple_add_schedule
+from repro.kernels.ternary_matmul.ops import (quantize_and_pack,
+                                              ternary_matmul_op)
+from repro.kernels.ternary_matmul.ref import (pack_ternary,
+                                              ternary_matmul_ref,
+                                              unpack_ternary)
+
+
+@pytest.mark.parametrize("rows", [64, 1000, 1024, 2500])
+@pytest.mark.parametrize("width", [1, 8, 20])
+def test_tap_kernel_vs_ref_and_core(rows, width):
+    lut = build_lut_nonblocked(tt.full_adder(3))
+    rng = np.random.default_rng(rows + width)
+    a_d = rng.integers(0, 3, (rows, width)).astype(np.int8)
+    b_d = rng.integers(0, 3, (rows, width)).astype(np.int8)
+    arr = jnp.asarray(np.concatenate(
+        [a_d, b_d, np.zeros((rows, 1), np.int8)], axis=1))
+    out_k = np.asarray(tap_ripple_add(arr, lut, width, carry_col=2 * width,
+                                      block_rows=256))
+    sched = ripple_add_schedule(lut, width, 2 * width)
+    out_r = np.asarray(apply_schedule(arr, sched))
+    out_c = np.asarray(ap.ripple_add(arr, lut, width, carry_col=2 * width))
+    assert np.array_equal(out_k, out_r)
+    assert np.array_equal(out_k, out_c)
+
+
+def test_tap_kernel_blocked_schedule():
+    lut = build_lut_blocked(tt.full_adder(3))
+    rng = np.random.default_rng(0)
+    arr = jnp.asarray(rng.integers(0, 3, (512, 9)).astype(np.int8))
+    out_k = np.asarray(tap_apply_lut(arr, lut, (0, 1, 2), block_rows=128))
+    out_c = np.asarray(ap.apply_lut_pure(arr, lut, (0, 1, 2)))
+    assert np.array_equal(out_k, out_c)
+
+
+def test_tap_kernel_dont_care_rows_passthrough():
+    lut = build_lut_nonblocked(tt.full_adder(3))
+    arr = jnp.full((100, 3), -1, jnp.int8)         # all don't-care
+    out = np.asarray(tap_apply_lut(arr, lut, (0, 1, 2), block_rows=128))
+    # DC matches every key, so the first block's write lands — but compare
+    # with the core simulator, which has identical semantics
+    out_c = np.asarray(ap.apply_lut_pure(arr, lut, (0, 1, 2)))
+    assert np.array_equal(out, out_c)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (32, 256, 128),
+                                   (100, 300, 96), (256, 512, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ternary_matmul_sweep(m, k, n, dtype):
+    key = jax.random.PRNGKey(m * 1000 + k + n)
+    w = jax.random.normal(key, (k, n), jnp.float32) * 0.05
+    packed, scale = quantize_and_pack(w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k), dtype)
+    y_k = ternary_matmul_op(x, packed, scale)
+    y_r = ternary_matmul_ref(x, packed, scale)
+    assert y_k.shape == (m, n) and y_k.dtype == dtype
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_pack_unpack_exhaustive_values():
+    w = jnp.asarray(np.array([[-1], [0], [1]] * 16, np.int8)[:32])
+    assert (unpack_ternary(pack_ternary(w)) == w).all()
+
+
+def test_ternary_matmul_exact_integers():
+    """With integer activations the ternary product is exact."""
+    rng = np.random.default_rng(7)
+    w_t = jnp.asarray(rng.integers(-1, 2, (64, 32)), jnp.int8)
+    packed = pack_ternary(w_t)
+    scale = jnp.ones((32,), jnp.float32)
+    x = jnp.asarray(rng.integers(-3, 4, (16, 64)), jnp.float32)
+    y = ternary_matmul_op(x, packed, scale)
+    want = np.asarray(x) @ np.asarray(w_t, np.float32)
+    np.testing.assert_array_equal(np.asarray(y), want)

@@ -1,0 +1,132 @@
+"""LUT generation: Algorithm 1 (non-blocked) + Algorithms 2-4 (blocked),
+golden checks against the paper's Tables VI/VII/X structure."""
+import itertools
+
+import pytest
+
+from repro.core import (CycleBreakError, StateDiagram, build_lut_blocked,
+                        build_lut_nonblocked)
+from repro.core import truth_tables as tt
+from repro.core.blocked import best_blocked_lut
+
+FUNCTIONS = [
+    tt.full_adder(2), tt.full_adder(3), tt.full_adder(4), tt.full_adder(5),
+    tt.full_subtractor(2), tt.full_subtractor(3), tt.full_subtractor(4),
+    tt.half_adder(3), tt.half_adder(4),
+    tt.tmin(3), tt.tmax(3), tt.modsum(3), tt.tnor(3), tt.tnand(3),
+    tt.tnot_copy(3), tt.tnot_copy(4), tt.modsum(4), tt.tnor(5),
+]
+
+
+@pytest.mark.parametrize("fn", FUNCTIONS, ids=lambda f: f.name)
+def test_nonblocked_valid(fn):
+    lut = build_lut_nonblocked(fn)
+    lut.validate(fn)
+    sd = StateDiagram(fn)
+    assert lut.n_passes == len(sd.action_nodes)
+    assert lut.n_write_cycles == lut.n_passes      # one write per pass
+
+
+@pytest.mark.parametrize("fn", FUNCTIONS, ids=lambda f: f.name)
+def test_blocked_valid_and_never_worse(fn):
+    lut = build_lut_blocked(fn)
+    lut.validate(fn)
+    nb = build_lut_nonblocked(fn)
+    assert lut.n_passes == nb.n_passes             # same compares
+    assert lut.n_write_cycles <= nb.n_write_cycles
+
+
+def test_binary_adder_table_vi():
+    """Paper Table VI: binary AP adder has 4 action passes, 4 noAction."""
+    fa = tt.full_adder(2)
+    lut = build_lut_nonblocked(fa)
+    assert lut.n_passes == 4
+    assert sorted(lut.no_action_states) == [(0, 0, 0), (0, 1, 0),
+                                            (1, 0, 1), (1, 1, 1)]
+    # first-ordered passes write (B,C) only — no widened writes in binary
+    assert all(p.write_cols == (1, 2) for p in lut.passes)
+
+
+def test_tfa_table_vii_structure():
+    """Paper Table VII: 21 action passes / 6 noAction; exactly one widened
+    3-trit write from the 101 -> 020 cycle break."""
+    fa = tt.full_adder(3)
+    sd = StateDiagram(fa)
+    assert sd.breaks_used == {(1, 0, 1): (0, 2, 0)}      # the paper's break
+    lut = build_lut_nonblocked(fa, sd)
+    assert lut.n_passes == 21
+    assert len(lut.no_action_states) == 6
+    widened = [p for p in lut.passes if p.write_cols == (0, 1, 2)]
+    assert len(widened) == 1 and widened[0].key == (1, 0, 1)
+    assert widened[0].write_vals == (0, 2, 0)
+
+
+def test_tfa_blocked_table_x_structure():
+    """Paper Table X: 21 passes grouped into 9 write blocks."""
+    lut = build_lut_blocked(tt.full_adder(3))
+    assert lut.n_passes == 21
+    assert lut.n_write_cycles == 9
+    # W020 (the widened write) is a singleton block
+    blk_sizes = sorted(len(b.keys) for b in lut.blocks)
+    assert 1 in blk_sizes
+
+
+def test_best_blocked_beats_paper():
+    """Beyond-paper: the 120 -> 201 redirect yields 8 blocks vs 9."""
+    lut, breaks = best_blocked_lut(tt.full_adder(3))
+    lut.validate(tt.full_adder(3))
+    assert lut.n_write_cycles == 8
+    assert breaks == {(1, 2, 0): (2, 0, 1)}
+
+
+def test_ordering_property_iv_a():
+    """§IV.A: any value written by pass i that has its own pass j must
+    satisfy j < i (no domino re-application)."""
+    for fn in (tt.full_adder(3), tt.modsum(3), tt.full_subtractor(4)):
+        lut = build_lut_nonblocked(fn)
+        order = {p.key: i for i, p in enumerate(lut.passes)}
+        na = set(lut.no_action_states)
+        for i, p in enumerate(lut.passes):
+            y = list(p.key)
+            for c, v in zip(p.write_cols, p.write_vals):
+                y[c] = v
+            y = tuple(y)
+            assert y in na or order[y] < i
+
+
+def test_inplace_not_is_unschedulable():
+    """x -> (r-1)-x is an involution with no free column: the paper's
+    cycle-breaking mechanism provably cannot apply (our §IV.B finding)."""
+    with pytest.raises(CycleBreakError):
+        StateDiagram(tt.tnot(3))
+
+
+def test_protected_cols_block_cycle_break():
+    """With all free columns protected, the TFA cycle is unbreakable."""
+    fn = tt.from_callable(
+        "fa3_protected", 3, 3, (1, 2),
+        lambda x: (x[0], (x[0] + x[1] + x[2]) % 3, (x[0] + x[1] + x[2]) // 3),
+        protected_cols=(0,))
+    with pytest.raises(CycleBreakError):
+        StateDiagram(fn)
+
+
+def test_blocked_write_action_uniform_within_block():
+    lut = build_lut_blocked(tt.full_adder(3))
+    for blk in lut.blocks:
+        assert len(set((blk.write_cols, blk.write_vals)
+                       for _ in blk.keys)) == 1
+        assert len(set(blk.keys)) == len(blk.keys)
+
+
+def test_exhaustive_replay_matches_function():
+    """Replay every possible stored vector through both schedules."""
+    for fn in (tt.full_adder(3), tt.full_adder(4), tt.modsum(3)):
+        nb = build_lut_nonblocked(fn)
+        bl = build_lut_blocked(fn)
+        for x in itertools.product(range(fn.radix), repeat=fn.width):
+            for lut in (nb, bl):
+                got = lut.apply_row(x)
+                want = fn(x)
+                for c in fn.write_cols:
+                    assert got[c] == want[c], (fn.name, x, got, want)

