@@ -5,15 +5,21 @@ structural HBM-traffic/bytes arithmetic for the TPU roofline story).
    (the paper's in-memory property on TPU), + wall time of the jnp path.
 2. ternary_matmul: weight bytes bf16 vs 2-bit packed (8x) and wall time of
    the fake-quant vs dense matmul on CPU.
+3. apc: whole-program compiler (fused pallas executor, traced stats) vs the
+   interpreted pass-by-pass apply_lut replay, JSON-emitted so future PRs
+   have a perf trajectory (benchmarks/apc_bench.json).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import apc
 from repro.core import ap, truth_tables as tt
 from repro.core.nonblocked import build_lut_nonblocked
 from repro.kernels.tap_pass.ops import hbm_traffic_model
@@ -60,9 +66,73 @@ def bench_ternary(m: int = 256, k: int = 2048, n: int = 2048):
           f"{bytes_bf16/bytes_packed:.0f}x")
 
 
+def bench_apc(rows_list=(1024, 65536), widths=(8, 20),
+              json_path: str | None = None) -> list[dict]:
+    """AP program compiler vs interpreted replay: 20-digit ternary add.
+
+    The interpreted path is :func:`repro.core.ap.ripple_add` with stats —
+    per-pass python dispatch, ``int()`` host syncs every write cycle, host
+    ``np.bincount`` per compare.  The apc path runs the whole flattened
+    program in one pallas_call per row-block with in-graph counters.
+    """
+    results = []
+    for width in widths:
+        lut = build_lut_nonblocked(tt.full_adder(3))
+        compiled = apc.compile_named("add", 3, width)
+        for rows in rows_list:
+            rng = np.random.default_rng(rows + width)
+            a = rng.integers(0, 3 ** width, rows)
+            b = rng.integers(0, 3 ** width, rows)
+            arr = jnp.asarray(ap.encode_operands(a, b, 3, width))
+            # interpreted pass-by-pass replay (the oracle path), stats on
+            t0 = time.perf_counter()
+            out_o = ap.ripple_add(arr, lut, width, 2 * width,
+                                  stats=ap.APStats(radix=3))
+            jax.block_until_ready(out_o)
+            replay_us = (time.perf_counter() - t0) * 1e6
+            # fused compiler path, stats on (and a stats-off variant)
+            run_s = lambda: apc.execute(arr, compiled, collect_stats=True)
+            run_p = lambda: apc.execute(arr, compiled, collect_stats=False)
+            jax.block_until_ready(run_s()[0])       # compile
+            t0 = time.perf_counter()
+            out_f, traced = run_s()
+            jax.block_until_ready((out_f, traced))
+            apc_stats_us = (time.perf_counter() - t0) * 1e6
+            jax.block_until_ready(run_p()[0])
+            t0 = time.perf_counter()
+            jax.block_until_ready(run_p()[0])
+            apc_us = (time.perf_counter() - t0) * 1e6
+            assert np.array_equal(np.asarray(out_o), np.asarray(out_f))
+            row = {"op": "add", "radix": 3, "rows": rows, "width": width,
+                   "replay_stats_us": round(replay_us),
+                   "apc_stats_us": round(apc_stats_us),
+                   "apc_us": round(apc_us),
+                   "speedup_stats_x": round(replay_us / apc_stats_us, 2),
+                   "speedup_pure_x": round(replay_us / apc_us, 2)}
+            results.append(row)
+            print(f"apc_add_{rows}x{width}t,{row['apc_stats_us']},"
+                  f"replay={row['replay_stats_us']}us_"
+                  f"speedup={row['speedup_stats_x']}x")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"bench": "apc_vs_replay", "results": results}, f,
+                      indent=2)
+        print(f"apc bench JSON -> {json_path}")
+    return results
+
+
 def main():
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="add the 1M-row tier (slow interpreted baseline)")
+    p.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "apc_bench.json"))
+    args = p.parse_args()
     bench_tap()
     bench_ternary()
+    rows = (1024, 65536, 1048576) if args.full else (1024, 65536)
+    bench_apc(rows_list=rows, json_path=args.json)
 
 
 if __name__ == "__main__":

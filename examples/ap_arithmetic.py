@@ -1,13 +1,15 @@
 """Beyond the paper's adder: the LUT compiler is universal (paper §I claims
 NOR/XOR/AND/mult/add/sub) — here: subtraction, multiplication, logic ops, and
 higher radices, all validated against numpy, plus the beyond-paper
-best-blocked schedule search.
+best-blocked schedule search and the AP program compiler (repro.apc) that
+fuses whole multi-digit programs into one kernel launch.
 
 Run:  PYTHONPATH=src python examples/ap_arithmetic.py
 """
 import jax.numpy as jnp
 import numpy as np
 
+from repro import apc
 from repro.core import build_lut_blocked, build_lut_nonblocked
 from repro.core import ap, truth_tables as tt
 from repro.core.blocked import best_blocked_lut
@@ -24,7 +26,7 @@ for radix in (2, 3, 4, 5):
     print(f"radix-{radix} adder: {nb.n_passes} passes, "
           f"blocked {bl.n_write_cycles} writes")
 
-# ---- subtraction ------------------------------------------------------------
+# ---- subtraction (both engines: interpreted replay and fused compiler) ------
 w = 8
 sub = tt.full_subtractor(3)
 lut_sub = build_lut_nonblocked(sub)
@@ -32,9 +34,12 @@ a = rng.integers(0, 3 ** w, 256)
 b = rng.integers(0, 3 ** w, 256)
 arr = jnp.asarray(ap.encode_operands(a, b, 3, w))
 out = np.asarray(ap.ripple_sub(arr, lut_sub, w, borrow_col=2 * w))
+out_apc = np.asarray(ap.ripple_sub(arr, lut_sub, w, borrow_col=2 * w,
+                                   engine="apc"))
 got = ap.decode_digits(out, list(range(w, 2 * w)), 3)
 assert np.array_equal(got, (a - b) % 3 ** w)
-print(f"ternary subtraction: 256 rows x {w} trits correct")
+assert np.array_equal(out, out_apc), "fused engine must be bit-identical"
+print(f"ternary subtraction: 256 rows x {w} trits correct (replay == apc)")
 
 # ---- multiplication (shift-and-add with operand repair; see DESIGN.md) ------
 w = 4
@@ -62,6 +67,33 @@ for name in ("min", "max", "modsum", "nor", "nand"):
     lut = build_lut_nonblocked(fn)
     lut.validate(fn)
     print(f"ternary {name}: {lut.n_passes} passes valid")
+
+# ---- AP program compiler: whole programs as one fused schedule --------------
+w = 20
+compiled = apc.compile_named("add", 3, w)
+print(f"\napc 20-trit adder: {compiled.n_steps} fused steps, "
+      f"{compiled.n_compare_cycles} compare + {compiled.n_write_cycles} "
+      f"write cycles")
+a = rng.integers(0, 3 ** w, 4096)
+b = rng.integers(0, 3 ** w, 4096)
+arr = jnp.asarray(ap.encode_operands(a, b, 3, w))
+out, traced = apc.execute(arr, compiled, collect_stats=True)
+stats = apc.to_ap_stats(traced, compiled, 4096, radix=3)
+got = ap.decode_digits(np.asarray(out), list(range(w, 2 * w)), 3) \
+    + np.asarray(out)[:, 2 * w].astype(np.int64) * 3 ** w
+assert np.array_equal(got, a + b)
+print(f"apc fused add: 4096 rows correct, {stats.sets / 4096:.2f} "
+      f"sets/add (paper Table XI: 21.02), one kernel launch")
+
+# new ops via the compiler: radix-complement negate, digitwise MVL max
+neg = apc.compile_named("negate", 3, 8)
+arrn = np.zeros((128, 17), np.int8)
+for i in range(8):
+    arrn[:, i] = (b[:128] // 3 ** i) % 3
+outn, _ = apc.execute(jnp.asarray(arrn), neg)
+assert np.array_equal(ap.decode_digits(np.asarray(outn), list(range(8, 16)), 3),
+                      (-b[:128]) % 3 ** 8)
+print("apc negate: radix-complement of 128 rows correct")
 
 # ---- beyond-paper: best cycle-break search ----------------------------------
 best, breaks = best_blocked_lut(tt.full_adder(3))

@@ -2,7 +2,10 @@
 
 Layers:
   core/     the paper's contribution (LUT compiler + MvAP functional simulator)
-  kernels/  Pallas TPU kernels (fused LUT passes, packed ternary matmul)
+  apc/      AP program compiler (microcode IR -> flat schedule -> fused
+            sharded executor with traced stats)
+  kernels/  Pallas TPU kernels (fused LUT passes + whole-program fori_loop
+            kernel, packed ternary matmul)
   models/   assigned LM architectures (dense/MoE/SSM/hybrid/enc-dec/VLM/audio)
   configs/  one config per assigned architecture + the paper's TAP setup
   data/     token pipeline

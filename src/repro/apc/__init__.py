@@ -1,0 +1,71 @@
+"""AP program compiler: microcode IR + fused sharded executor.
+
+The paper's methodology is a compiler in disguise — this package makes the
+layers explicit and maps them back to the source sections:
+
+==========================  =================================================
+IR / compiler concept        Paper concept
+==========================  =================================================
+``ir.ApplyLUT``              One LUT-schedule application (§IV.A Table VII /
+                             §V Table IX): the full compare/write pass list
+                             for an in-place digit function at one digit
+                             position.
+``ir.ApplyLUT.extra_key``    Predicated execution: every compare key is
+                             extended with exact matches (the shift-and-add
+                             multiplier's "only rows with B_j == t" gate,
+                             §IV methodology extended beyond the adder).
+``ir.SetCol / ZeroCol``      The unconditional carry-clear write that opens
+                             every multi-digit operation (§IV.C: C <- 0).
+``ir.CompareWrite``          A single masked compare + write cycle (§III
+                             Table III semantics) outside any LUT — used for
+                             the multiply operand-repair sweeps that undo
+                             the §IV.B cycle-breaking dummy write.
+``ir.ForDigit``              Digit-serial ripple over the p positions of a
+                             multi-digit word (§IV.C "the carry column
+                             ripples across positions").
+``lower.Step``               One compare-block + write cycle: the blocked
+                             (§V, DFF latch) execution unit; non-blocked
+                             passes are 1-key blocks.
+``lower.CompiledProgram``    The whole program flattened to a static
+                             schedule + packed to dense tensors — the
+                             microcode store of the AP sequencer (Fouda et
+                             al. tutorial's programmable-SIMD framing).
+``exec.execute``             Row-parallel replay: all CAM rows take every
+                             compare simultaneously (§II-III), fused so the
+                             array stays resident across the entire program.
+``stats.TracedStats``        The functional co-simulator counters (§VI:
+                             Table V set/reset rules, mismatch histogram for
+                             the matchline energy model) as in-graph
+                             reductions.
+==========================  =================================================
+
+Typical use::
+
+    from repro import apc
+    compiled = apc.compile_named("add", radix=3, width=20)
+    out, traced = apc.execute(arr, compiled, collect_stats=True)
+    stats = apc.to_ap_stats(traced, compiled, arr.shape[0], radix=3)
+
+or via the drivers: ``repro.core.ap.ripple_add(..., engine="apc")``.
+"""
+from . import exec as exec  # noqa: PLC0414 — re-export the module
+from . import ir, lower, stats
+from .exec import execute, execute_sharded, run
+from .ir import (ApplyLUT, CompareWrite, ForDigit, Program, RelCol, SetCol,
+                 ZeroCol, digit)
+from .lower import (CompiledProgram, Step, compile_named, compile_program,
+                    elementwise_program, lower as lower_program,
+                    multiply_program, negate_program, ripple_add_program,
+                    ripple_sub_program)
+from .stats import TracedStats, accumulate, to_ap_stats
+
+__all__ = [
+    "exec", "ir", "lower", "stats",
+    "execute", "execute_sharded", "run",
+    "ApplyLUT", "CompareWrite", "ForDigit", "Program", "RelCol", "SetCol",
+    "ZeroCol", "digit",
+    "CompiledProgram", "Step", "compile_named", "compile_program",
+    "elementwise_program", "lower_program", "multiply_program",
+    "negate_program", "ripple_add_program", "ripple_sub_program",
+    "TracedStats", "accumulate", "to_ap_stats",
+]

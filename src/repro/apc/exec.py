@@ -1,0 +1,128 @@
+"""Fused sharded executor for compiled AP programs.
+
+One ``pallas_call`` per row-block replays the ENTIRE flattened program
+against the VMEM-resident tile — a 20-trit add (421 steps) or a shift-and-add
+multiply (thousands of steps) costs one HBM read + one HBM write per block
+instead of one round-trip per pass.  Long schedules stay cheap to trace: the
+kernel fori-loops over the packed schedule tensors
+(:class:`~repro.apc.lower.CompiledProgram`).
+
+Rows are the data-parallel axis. :func:`execute` runs on whatever device
+holds the array; :func:`execute_sharded` shard_maps row-blocks over the
+("pod", "data") axes of a :mod:`repro.launch.mesh` device mesh, psumming the
+traced counters so every shard returns the global stats.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+try:                                    # jax >= 0.6 public API
+    from jax import shard_map
+except ImportError:                     # jax 0.4/0.5
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.ap import APStats
+from ..kernels.tap_pass.kernel import tap_run_program
+from ..kernels.tap_pass.ops import _pad_rows
+from ..launch.mesh import data_axes
+from .ir import Program
+from .lower import CompiledProgram, compile_program
+from .stats import HIST_BINS, TracedStats, accumulate
+
+BLOCK_ROWS = 4096        # fused-program default: fewer, fatter row-blocks
+
+
+def execute(arr: jax.Array, compiled: CompiledProgram, *,
+            collect_stats: bool = False, block_rows: int | None = None,
+            interpret: bool = True
+            ) -> tuple[jax.Array, TracedStats | None]:
+    """Run a compiled program on [rows, cols] int8 digits.
+
+    Returns ``(out, traced)``; ``traced`` is ``None`` unless
+    ``collect_stats`` — stats cost extra in-kernel reductions, so the pure
+    path skips them entirely (static flag, separate compiled kernel).
+    """
+    rows, cols = arr.shape
+    if cols < compiled.min_cols:
+        raise ValueError(
+            f"array has {cols} columns, program touches {compiled.min_cols}")
+    block_rows = block_rows or min(BLOCK_ROWS, max(8, rows))
+    padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), block_rows)
+    out, raw = tap_run_program(
+        padded, compiled.cmp_cols, compiled.keys, compiled.key_valid,
+        compiled.hist_flag, compiled.wr_cols, compiled.wr_vals,
+        jnp.int32(rows), block_rows=block_rows,
+        collect_stats=collect_stats, hist_bins=HIST_BINS,
+        interpret=interpret)
+    out = out[:rows]
+    return out, (TracedStats(block_counts=raw) if collect_stats else None)
+
+
+def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
+                    collect_stats: bool = False,
+                    block_rows: int | None = None, interpret: bool = True
+                    ) -> tuple[jax.Array, TracedStats | None]:
+    """Shard rows over the mesh's batch axes and run the fused kernel
+    per-shard; traced counters are psummed so the returned stats are global.
+    """
+    axes = data_axes(mesh) or tuple(mesh.axis_names[:1])
+    n_shards = math.prod(mesh.shape[a] for a in axes)
+    rows, cols = arr.shape
+    block_rows = block_rows or min(BLOCK_ROWS,
+                                   max(8, -(-rows // n_shards)))
+    padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), n_shards * block_rows)
+    shard_rows = padded.shape[0] // n_shards
+
+    def per_shard(a):
+        # global row index of this shard's first row -> how many of its rows
+        # are real (the tail shard sees the padding)
+        idx = jnp.int32(0)
+        for ax in axes:
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        n_local = jnp.clip(rows - idx * shard_rows, 0, shard_rows)
+        out, raw = tap_run_program(
+            a, compiled.cmp_cols, compiled.keys, compiled.key_valid,
+            compiled.hist_flag, compiled.wr_cols, compiled.wr_vals,
+            n_local, block_rows=block_rows,
+            collect_stats=collect_stats, hist_bins=HIST_BINS,
+            interpret=interpret)
+        if collect_stats:
+            # elementwise-add the (n_blocks, counters) tensors across shards;
+            # the int64 total reduction stays on the host (stats.accumulate)
+            return out, TracedStats(jax.lax.psum(raw, axes))
+        return out, jnp.zeros((), jnp.int32)
+
+    spec_in = P(axes if len(axes) > 1 else axes[0])
+    f = shard_map(per_shard, mesh=mesh, in_specs=(spec_in,),
+                  out_specs=(spec_in, P()), check_rep=False)
+    out, traced = f(padded)
+    out = out[:rows]
+    if collect_stats:
+        return out, traced
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# Driver-style front door (what core/ap.py routes through)
+# ---------------------------------------------------------------------------
+
+def run(arr: jax.Array, program: Program | CompiledProgram, *,
+        stats: APStats | None = None, mesh=None,
+        block_rows: int | None = None, interpret: bool = True) -> jax.Array:
+    """Compile (cached) + execute; optionally merge traced counters into an
+    existing :class:`APStats` (one host sync, after the run completes)."""
+    compiled = (program if isinstance(program, CompiledProgram)
+                else compile_program(program))
+    kw = dict(collect_stats=stats is not None, block_rows=block_rows,
+              interpret=interpret)
+    if mesh is not None:
+        out, traced = execute_sharded(arr, compiled, mesh, **kw)
+    else:
+        out, traced = execute(arr, compiled, **kw)
+    if stats is not None:
+        accumulate(stats, traced, compiled, n_rows=arr.shape[0])
+    return out

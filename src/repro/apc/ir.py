@@ -1,0 +1,119 @@
+"""Microcode IR for whole AP programs (the missing sequencer layer).
+
+An AP *program* is a tuple of ops over the physical column space of one
+MvCAM array:
+
+- :class:`SetCol` — unconditional write of a constant digit into a column
+  (:func:`ZeroCol` is the carry-clearing special case).
+- :class:`ApplyLUT` — one LUT-schedule application (paper §IV-V) at a
+  physical column mapping, optionally predicated by ``extra_key`` exact
+  matches appended to every compare (the multiply driver's B_j == t gate).
+- :class:`CompareWrite` — a raw masked compare + write pair; used for the
+  multiply operand-repair sweeps, which the functional simulator charges as
+  one compare + one write cycle but does NOT histogram (``count_mismatch``).
+- :class:`ForDigit` — a structured loop over digit positions; body column
+  references use :class:`RelCol` affine expressions of the loop variable and
+  are resolved at lowering time (the schedule stays fully static).
+
+Column references (``Col``) are either plain ints (physical column) or
+``RelCol`` (loop-relative).  ``digit("i") + base`` / ``base + digit("i")``
+both work.
+
+Programs are *data*: :mod:`repro.apc.lower` flattens them into one static
+:class:`~repro.apc.lower.Step` schedule which the fused executor
+(:mod:`repro.apc.exec`) replays in a single pallas_call per row-block.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Union
+
+from ..core.lut import LUT
+
+
+@dataclass(frozen=True)
+class RelCol:
+    """Affine column expression ``env[var] + offset``."""
+    var: str
+    offset: int = 0
+
+    def __add__(self, k: int) -> "RelCol":
+        return RelCol(self.var, self.offset + int(k))
+
+    __radd__ = __add__
+
+    def resolve(self, env: dict[str, int]) -> int:
+        if self.var not in env:
+            raise KeyError(f"unbound loop variable {self.var!r}")
+        return env[self.var] + self.offset
+
+
+Col = Union[int, RelCol]
+
+
+def digit(var: str = "i") -> RelCol:
+    """The loop variable of an enclosing :class:`ForDigit` as a column expr."""
+    return RelCol(var, 0)
+
+
+def resolve_col(col: Col, env: dict[str, int]) -> int:
+    c = col.resolve(env) if isinstance(col, RelCol) else int(col)
+    if c < 0:
+        raise ValueError(f"column expression resolved to negative column {c}")
+    return c
+
+
+@dataclass(frozen=True)
+class SetCol:
+    """Unconditional write ``col := val`` (one write cycle, no compare)."""
+    col: Col
+    val: int = 0
+
+
+def ZeroCol(col: Col) -> SetCol:
+    """Clear a carry/borrow/scratch column (paper drivers zero C first)."""
+    return SetCol(col, 0)
+
+
+@dataclass(frozen=True)
+class ApplyLUT:
+    """One LUT application: logical LUT column ``i`` lives at
+    ``col_map[i]``; every compare key is extended by the ``extra_key``
+    (col, value) exact matches."""
+    lut: LUT
+    col_map: tuple[Col, ...]
+    extra_key: tuple[tuple[Col, int], ...] = ()
+
+    def __post_init__(self):
+        if len(self.col_map) != self.lut.width:
+            raise ValueError(
+                f"col_map has {len(self.col_map)} entries for a width-"
+                f"{self.lut.width} LUT {self.lut.fn_name}")
+
+
+@dataclass(frozen=True)
+class CompareWrite:
+    """Raw compare/write microinstruction (repair sweeps, fix-ups).
+
+    ``count_mismatch`` mirrors the functional simulator: driver-level repair
+    compares increment the compare-cycle counter but are excluded from the
+    energy model's mismatch histogram.
+    """
+    compare_cols: tuple[Col, ...]
+    key: tuple[int, ...]
+    write_cols: tuple[Col, ...]
+    write_vals: tuple[int, ...]
+    count_mismatch: bool = False
+
+
+@dataclass(frozen=True)
+class ForDigit:
+    """Static loop ``for var in range(start, stop)`` over digit positions."""
+    var: str
+    start: int
+    stop: int
+    body: tuple["Op", ...]
+
+
+Op = Union[SetCol, ApplyLUT, CompareWrite, ForDigit]
+Program = tuple[Op, ...]

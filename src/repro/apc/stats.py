@@ -1,0 +1,78 @@
+"""Traced execution counters: in-graph jnp reductions, no per-pass syncs.
+
+The pass-by-pass simulator (:func:`repro.core.ap.apply_lut`) calls ``int()``
+on every block's set/reset counts — one host round-trip per write cycle.
+The fused executor instead accumulates everything inside the kernel's
+fori_loop carry and returns a :class:`TracedStats` pytree alongside the
+digit array: ONE device->host transfer when (and only when) the caller
+converts to :class:`~repro.core.ap.APStats` for the Table XI energy model.
+
+Counter semantics are bit-identical to the simulator:
+
+- ``sets``/``resets`` follow the nTnR write rules (Table V): a changed digit
+  is one SET (+ one RESET unless the old cell was don't-care).
+- ``mismatch_hist[k]`` counts row-compares with exactly k mismatching masked
+  cells, only for compares the simulator histograms (LUT passes, not repair
+  sweeps).
+- compare/write cycle counts are schedule-static and live on the
+  :class:`~repro.apc.lower.CompiledProgram`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from ..core.ap import APStats
+from .lower import CompiledProgram
+
+HIST_BINS = 8                     # matches APStats.mismatch_hist default
+
+
+class TracedStats(NamedTuple):
+    """In-graph counters, one row per kernel grid block.
+
+    ``block_counts`` is (n_blocks, 2 + HIST_BINS) int32 laid out as
+    [sets, resets, hist[0..HIST_BINS)].  Per-block values sit far from int32
+    range; the *total* may not at extreme scale (mismatch-hist events =
+    rows x histogrammed compares), so the cross-block reduction happens in
+    int64 on the host at APStats-conversion time.  The convenience
+    properties below give in-graph int32 totals for interactive use —
+    exact up to ~2^31 counted events.
+    """
+    block_counts: jax.Array       # (n_blocks, 2 + HIST_BINS) int32
+
+    @property
+    def sets(self) -> jax.Array:
+        return self.block_counts[:, 0].sum()
+
+    @property
+    def resets(self) -> jax.Array:
+        return self.block_counts[:, 1].sum()
+
+    @property
+    def mismatch_hist(self) -> jax.Array:
+        return self.block_counts[:, 2:].sum(axis=0)
+
+
+def to_ap_stats(traced: TracedStats, compiled: CompiledProgram,
+                n_rows: int, radix: int) -> APStats:
+    """One host sync: materialize the traced counters as an APStats."""
+    out = APStats(radix=radix, n_rows=n_rows)
+    accumulate(out, traced, compiled, n_rows)
+    return out
+
+
+def accumulate(stats: APStats, traced: TracedStats,
+               compiled: CompiledProgram, n_rows: int) -> APStats:
+    """Merge a traced run into an existing APStats (driver-style, in place)."""
+    counts = np.asarray(traced.block_counts, np.int64)  # the one host sync
+    stats.sets += int(counts[:, 0].sum())
+    stats.resets += int(counts[:, 1].sum())
+    stats.n_compare_cycles += compiled.n_compare_cycles
+    stats.n_write_cycles += compiled.n_write_cycles
+    stats.n_rows = max(stats.n_rows, n_rows)
+    hist = counts[:, 2:].sum(axis=0)
+    stats.mismatch_hist[:len(hist)] += hist
+    return stats

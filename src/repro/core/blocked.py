@@ -13,6 +13,7 @@ level (Algorithm 4).
 """
 from __future__ import annotations
 
+import functools
 from collections import defaultdict
 
 from .lut import LUT, Pass
@@ -58,6 +59,18 @@ def initial_grp_lvl(sd: StateDiagram) -> tuple[dict, dict]:
 
 def build_lut_blocked(fn: InPlaceFunction,
                       diagram: StateDiagram | None = None) -> LUT:
+    if diagram is None:
+        return _build_lut_blocked_cached(fn)
+    return _build_lut_blocked(fn, diagram)
+
+
+@functools.lru_cache(maxsize=512)
+def _build_lut_blocked_cached(fn: InPlaceFunction) -> LUT:
+    return _build_lut_blocked(fn, None)
+
+
+def _build_lut_blocked(fn: InPlaceFunction,
+                       diagram: StateDiagram | None = None) -> LUT:
     sd = diagram or StateDiagram(fn)
     # fresh dynamic levels (diagram may be shared with the non-blocked build)
     for root in sd.roots:

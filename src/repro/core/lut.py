@@ -35,8 +35,8 @@ class Block:
     keys: tuple[Vec, ...]
 
 
-@dataclass
-class LUT:
+@dataclass(eq=False)           # identity eq/hash: schedules are interned via
+class LUT:                     # the cached builders, and IR nodes hold refs
     fn_name: str
     radix: int
     width: int

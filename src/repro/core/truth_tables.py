@@ -53,6 +53,17 @@ class InPlaceFunction:
     def __call__(self, x: Vec) -> Vec:
         return self.table[tuple(x)]
 
+    def __hash__(self) -> int:
+        # value-based hash (the auto-generated one chokes on the table dict);
+        # lets equal functions share one cached LUT build (lru_cache key).
+        memo = self.__dict__.get("_hash")
+        if memo is None:
+            memo = hash((self.name, self.radix, self.width, self.write_cols,
+                         self.protected_cols,
+                         tuple(sorted(self.table.items()))))
+            object.__setattr__(self, "_hash", memo)
+        return memo
+
 
 def from_callable(name: str, radix: int, width: int,
                   write_cols: tuple[int, ...],

@@ -56,6 +56,126 @@ def _tap_kernel(arr_ref, out_ref, *, schedule: tuple[Step, ...]):
     out_ref[...] = block
 
 
+def _tap_program_kernel(n_valid_ref, cmp_cols_ref, keys_ref, key_valid_ref,
+                        hist_flag_ref, wr_cols_ref, wr_vals_ref, arr_ref,
+                        out_ref, *stats_refs, block_rows: int,
+                        collect_stats: bool, hist_bins: int, unroll: int):
+    """Whole-program kernel: lax.fori_loop over a baked schedule tensor.
+
+    Unlike :func:`_tap_kernel` (schedule unrolled into the trace — fine for
+    one LUT sweep, hopeless for a 5k-step multiply program), this body traces
+    ONE generic step and loops over the dense schedule tensors, so trace time
+    is O(1) in program length.  Stats are carried through the loop and
+    written once per row-block; rows past ``n_valid_rows`` (block padding)
+    are masked out of both writes and counters.
+    """
+    i = pl.program_id(0)
+    block = arr_ref[...]                              # [block_rows, cols] int8
+    rows = block.shape[0]
+    row_ok = (i * block_rows
+              + jax.lax.broadcasted_iota(jnp.int32, (rows,), 0)
+              ) < n_valid_ref[0]
+    cmp_cols = cmp_cols_ref[...]                      # (S, C) int32, -1 pad
+    keys = keys_ref[...]                              # (S, K, C) int8
+    key_valid = key_valid_ref[...]                    # (S, K) bool
+    hist_flag = hist_flag_ref[...]                    # (S,) bool
+    wr_cols = wr_cols_ref[...]                        # (S, W) int32, -1 pad
+    wr_vals = wr_vals_ref[...]                        # (S, W) int8
+    n_steps, n_w = wr_cols.shape
+
+    n_c = cmp_cols.shape[1]
+
+    def step(s, carry):
+        block, sets, resets, hist = carry
+        cc = cmp_cols[s]                              # (C,)
+        c_ok = cc >= 0
+        sub = jnp.take(block, jnp.maximum(cc, 0), axis=1)   # (rows, C) int8
+        key_s = keys[s]                               # (K, C) int8
+        miss = (sub[:, None, :] != key_s[None, :, :]) & \
+               (sub[:, None, :] != DONT_CARE) & \
+               c_ok[None, None, :]                    # (rows, K, C)
+        kv = key_valid[s]                             # (K,)
+        if collect_stats:
+            # mismatch count doubles as the matcher: full match <=> mm == 0
+            mm = jnp.sum(miss, axis=2, dtype=jnp.int32)       # (rows, K)
+            tag = ((mm == 0) & kv[None, :]).any(axis=1)
+            counted = kv[None, :] & hist_flag[s] & row_ok[:, None]
+            # mm <= #compare columns, so higher bins are statically zero
+            for b in range(min(hist_bins, n_c + 1)):
+                hist = hist.at[b].add(
+                    jnp.sum((mm == b) & counted, dtype=jnp.int32))
+        else:
+            tag = (~miss.any(axis=2) & kv[None, :]).any(axis=1)
+        tag = jnp.where(kv.any(), tag, True) & row_ok
+        for w in range(n_w):
+            col = jnp.maximum(wr_cols[s, w], 0)
+            w_ok = wr_cols[s, w] >= 0
+            v = wr_vals[s, w]
+            old = jax.lax.dynamic_index_in_dim(block, col, axis=1,
+                                               keepdims=False)
+            changed = tag & (old != v) & w_ok
+            if collect_stats:
+                sets = sets + jnp.sum(changed, dtype=jnp.int32)
+                resets = resets + jnp.sum(changed & (old != DONT_CARE),
+                                          dtype=jnp.int32)
+            block = jax.lax.dynamic_update_index_in_dim(
+                block, jnp.where(changed, v, old), col, axis=1)
+        return block, sets, resets, hist
+
+    zero = jnp.zeros((), jnp.int32)
+    init = (block, zero, zero, jnp.zeros((hist_bins,), jnp.int32))
+    block, sets, resets, hist = jax.lax.fori_loop(0, n_steps, step, init,
+                                                  unroll=unroll)
+    out_ref[...] = block
+    if collect_stats:
+        stats_refs[0][...] = jnp.concatenate(
+            [sets[None], resets[None], hist])[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_rows", "collect_stats", "hist_bins", "interpret", "unroll"))
+def tap_run_program(arr: jax.Array, cmp_cols: jax.Array, keys: jax.Array,
+                    key_valid: jax.Array, hist_flag: jax.Array,
+                    wr_cols: jax.Array, wr_vals: jax.Array,
+                    n_valid_rows: jax.Array, *,
+                    block_rows: int = BLOCK_ROWS,
+                    collect_stats: bool = False, hist_bins: int = 8,
+                    interpret: bool = True, unroll: int = 4):
+    """Run a whole packed program: one pallas_call, grid over row-blocks.
+
+    Returns ``out`` (same shape as ``arr``) and, when ``collect_stats``, a
+    per-grid-block (grid, 2 + hist_bins) int32 counter tensor laid out as
+    [sets, resets, hist[0..hist_bins)] — summed over grid by the caller
+    (still in-graph).  The schedule tensors are runtime args, so one
+    compiled kernel serves every program with the same packed shape.
+    """
+    rows, cols = arr.shape
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not a multiple of {block_rows}")
+    grid = (rows // block_rows,)
+    n_valid = jnp.asarray(n_valid_rows, jnp.int32).reshape((1,))
+    full = lambda t: pl.BlockSpec(t.shape, lambda i: (0,) * t.ndim)
+    kernel = functools.partial(
+        _tap_program_kernel, block_rows=block_rows,
+        collect_stats=collect_stats, hist_bins=hist_bins, unroll=unroll)
+    in_specs = [full(n_valid), full(cmp_cols), full(keys), full(key_valid),
+                full(hist_flag), full(wr_cols), full(wr_vals),
+                pl.BlockSpec((block_rows, cols), lambda i: (i, 0))]
+    out_specs = [pl.BlockSpec((block_rows, cols), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((rows, cols), jnp.int8)]
+    if collect_stats:
+        out_specs.append(pl.BlockSpec((1, 2 + hist_bins), lambda i: (i, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((grid[0], 2 + hist_bins), jnp.int32))
+    res = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(n_valid, cmp_cols, keys, key_valid, hist_flag, wr_cols, wr_vals, arr)
+    if collect_stats:
+        return res[0], res[1]
+    return res[0], None
+
+
 @functools.partial(jax.jit,
                    static_argnames=("schedule", "block_rows", "interpret"))
 def tap_apply_schedule(arr: jax.Array, schedule: tuple[Step, ...],

@@ -1,0 +1,253 @@
+"""AP program compiler: fused execution vs the pass-by-pass oracle.
+
+Equivalence contract (ISSUE acceptance): for ripple add, ripple sub, and
+multiply at radix 3 and 4, the apc executor must produce bit-identical digit
+arrays AND identical APStats counters (sets / resets / compare+write cycles /
+mismatch histogram) to the core.ap replay; plus exact stats parity on the
+paper's 20-trit adder configuration.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import apc
+from repro.core import ap, build_lut_blocked, build_lut_nonblocked
+from repro.core import truth_tables as tt
+
+
+def _stats_equal(a: ap.APStats, b: ap.APStats) -> None:
+    assert a.sets == b.sets
+    assert a.resets == b.resets
+    assert a.n_compare_cycles == b.n_compare_cycles
+    assert a.n_write_cycles == b.n_write_cycles
+    assert a.n_rows == b.n_rows
+    assert np.array_equal(a.mismatch_hist, b.mismatch_hist)
+
+
+@pytest.mark.parametrize("radix", [3, 4])
+@pytest.mark.parametrize("op", ["add", "sub"])
+def test_apc_addsub_matches_oracle(radix, op):
+    w, rows = 5, 333
+    lut = build_lut_nonblocked(
+        tt.full_adder(radix) if op == "add" else tt.full_subtractor(radix))
+    rng = np.random.default_rng(radix * 7 + len(op))
+    a = rng.integers(0, radix ** w, rows)
+    b = rng.integers(0, radix ** w, rows)
+    arr = jnp.asarray(ap.encode_operands(a, b, radix, w))
+    driver = ap.ripple_add if op == "add" else ap.ripple_sub
+    kw = (dict(a_base=0) if op == "add" else {})
+    so, sf = ap.APStats(radix=radix), ap.APStats(radix=radix)
+    out_o = np.asarray(driver(arr, lut, w, 2 * w, stats=so, **kw))
+    out_f = np.asarray(driver(arr, lut, w, 2 * w, stats=sf,
+                              engine="apc", **kw))
+    assert np.array_equal(out_o, out_f)
+    _stats_equal(so, sf)
+    # numeric ground truth on the result digits
+    got = ap.decode_digits(out_f, list(range(w, 2 * w)), radix)
+    want = (a + b) % radix ** w if op == "add" else (a - b) % radix ** w
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("radix", [3, 4])
+def test_apc_multiply_matches_oracle(radix):
+    w, rows = 3, 65
+    lut_add = build_lut_nonblocked(tt.full_adder(radix))
+    lut_half = build_lut_nonblocked(tt.half_adder(radix))
+    rng = np.random.default_rng(radix)
+    a = rng.integers(0, radix ** w, rows)
+    b = rng.integers(0, radix ** w, rows)
+    arr = np.zeros((rows, 5 * w + 1), np.int8)
+    for i in range(w):
+        arr[:, i] = arr[:, w + i] = (a // radix ** i) % radix
+        arr[:, 2 * w + i] = (b // radix ** i) % radix
+    arr = jnp.asarray(arr)
+    args = (lut_add, lut_half, w, radix, 0, w, 2 * w, 3 * w, 5 * w)
+    so, sf = ap.APStats(radix=radix), ap.APStats(radix=radix)
+    out_o = np.asarray(ap.multiply(arr, *args, stats=so))
+    out_f = np.asarray(ap.multiply(arr, *args, stats=sf, engine="apc"))
+    assert np.array_equal(out_o, out_f)
+    _stats_equal(so, sf)
+    got = ap.decode_digits(out_f, list(range(3 * w, 5 * w)), radix)
+    assert np.array_equal(got, a * b)
+    # operand A survives the fused repair sweeps too
+    assert np.array_equal(ap.decode_digits(out_f, list(range(w)), radix), a)
+
+
+def test_apc_blocked_schedule_matches_oracle():
+    lut = build_lut_blocked(tt.full_adder(3))
+    rng = np.random.default_rng(11)
+    w = 4
+    a = rng.integers(0, 3 ** w, 200)
+    b = rng.integers(0, 3 ** w, 200)
+    arr = jnp.asarray(ap.encode_operands(a, b, 3, w))
+    so, sf = ap.APStats(radix=3), ap.APStats(radix=3)
+    out_o = np.asarray(ap.ripple_add(arr, lut, w, 2 * w, stats=so))
+    out_f = np.asarray(ap.ripple_add(arr, lut, w, 2 * w, stats=sf,
+                                     engine="apc"))
+    assert np.array_equal(out_o, out_f)
+    _stats_equal(so, sf)
+
+
+def test_apc_paper_20trit_adder_stats_parity():
+    """The paper's flagship config: 20-trit add, exact counter parity."""
+    lut = build_lut_nonblocked(tt.full_adder(3))
+    rng = np.random.default_rng(0)
+    rows, w = 512, 20
+    a = rng.integers(0, 3 ** w, rows)
+    b = rng.integers(0, 3 ** w, rows)
+    arr = jnp.asarray(ap.encode_operands(a, b, 3, w))
+    so, sf = ap.APStats(radix=3), ap.APStats(radix=3)
+    ap.ripple_add(arr, lut, w, carry_col=2 * w, stats=so)
+    ap.ripple_add(arr, lut, w, carry_col=2 * w, stats=sf, engine="apc")
+    _stats_equal(so, sf)
+    assert sf.n_compare_cycles == 21 * w
+    assert sf.mismatch_hist.sum() == 21 * w * rows
+    sets_per_add = sf.sets / rows
+    assert 20.0 < sets_per_add < 22.0              # paper: 21.02
+
+
+def test_apc_negate_and_elementwise():
+    r, w, rows = 3, 5, 129
+    rng = np.random.default_rng(5)
+    b = rng.integers(0, r ** w, rows)
+    arr = np.zeros((rows, 2 * w + 1), np.int8)
+    for i in range(w):
+        arr[:, i] = (b // r ** i) % r
+    arr = jnp.asarray(arr)
+    lut_not = build_lut_nonblocked(tt.tnot_copy(r))
+    lut_half = build_lut_nonblocked(tt.half_adder(r))
+    so, sf = ap.APStats(radix=r), ap.APStats(radix=r)
+    out_o = np.asarray(ap.negate(arr, lut_not, lut_half, w, 0, w, 2 * w,
+                                 stats=so))
+    out_f = np.asarray(ap.negate(arr, lut_not, lut_half, w, 0, w, 2 * w,
+                                 stats=sf, engine="apc"))
+    assert np.array_equal(out_o, out_f)
+    _stats_equal(so, sf)
+    got = ap.decode_digits(out_f, list(range(w, 2 * w)), r)
+    assert np.array_equal(got, (-b) % r ** w)
+
+    # digitwise MVL max (multi-valued OR) and min (AND)
+    a = rng.integers(0, r ** w, rows)
+    arr2 = jnp.asarray(ap.encode_operands(a, b, r, w, extra_cols=0))
+    for name, npop in (("max", np.maximum), ("min", np.minimum)):
+        lut = build_lut_nonblocked(tt.REGISTRY[name](r))
+        o = np.asarray(ap.elementwise(arr2, lut, w))
+        f = np.asarray(ap.elementwise(arr2, lut, w, engine="apc"))
+        assert np.array_equal(o, f)
+        ad = np.stack([(a // r ** i) % r for i in range(w)], 1)
+        bd = np.stack([(b // r ** i) % r for i in range(w)], 1)
+        assert np.array_equal(f[:, w:2 * w], npop(ad, bd))
+
+
+def test_apc_pad_rows_masked_from_writes_and_counters():
+    """rows % block_rows != 0: padded don't-care rows match every key, so
+    the kernel must mask them out of writes AND all counters."""
+    r, w, rows = 3, 5, 333                 # pads to 384 at block_rows=128
+    lut = build_lut_nonblocked(tt.full_adder(r))
+    rng = np.random.default_rng(42)
+    a = rng.integers(0, r ** w, rows)
+    b = rng.integers(0, r ** w, rows)
+    arr = jnp.asarray(ap.encode_operands(a, b, r, w))
+    so = ap.APStats(radix=r)
+    out_o = np.asarray(ap.ripple_add(arr, lut, w, 2 * w, stats=so))
+    compiled = apc.compile_named("add", r, w)
+    out_f, traced = apc.execute(arr, compiled, collect_stats=True,
+                                block_rows=128)
+    assert np.array_equal(out_o, np.asarray(out_f))
+    _stats_equal(so, apc.to_ap_stats(traced, compiled, rows, r))
+
+
+def test_apc_flat_schedule_matches_tap_ref_oracle():
+    """The lowered Step schedule, replayed by the legacy tap_pass jnp oracle
+    (via as_tap_steps), must equal the fused executor's output."""
+    from repro.kernels.tap_pass.ref import apply_schedule
+    compiled = apc.compile_named("add", 3, 6)
+    rng = np.random.default_rng(13)
+    a = rng.integers(0, 3 ** 6, 128)
+    b = rng.integers(0, 3 ** 6, 128)
+    arr = jnp.asarray(ap.encode_operands(a, b, 3, 6))
+    out_ref = np.asarray(apply_schedule(arr, compiled.as_tap_steps()))
+    out_apc, _ = apc.execute(arr, compiled)
+    assert np.array_equal(out_ref, np.asarray(out_apc))
+
+
+def test_apc_compile_cache_and_cycle_counts():
+    c1 = apc.compile_named("add", 3, 20)
+    c2 = apc.compile_named("add", 3, 20)
+    assert c1 is c2                                 # lru_cache hit
+    lut = build_lut_nonblocked(tt.full_adder(3))
+    assert c1.n_write_cycles == 20 * lut.n_write_cycles + 1
+    assert c1.n_compare_cycles == 20 * lut.n_compare_cycles
+    # structural lowering cache: same program -> same compiled object
+    prog = apc.ripple_add_program(lut, 20, carry_col=40)
+    assert apc.compile_program(prog) is apc.compile_program(prog)
+
+
+def test_apc_sharded_matches_local():
+    from repro.launch.mesh import make_smoke_mesh
+    mesh = make_smoke_mesh()
+    compiled = apc.compile_named("add", 3, 6)
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, 3 ** 6, 300)
+    b = rng.integers(0, 3 ** 6, 300)
+    arr = jnp.asarray(ap.encode_operands(a, b, 3, 6))
+    out_l, tr_l = apc.execute(arr, compiled, collect_stats=True,
+                              block_rows=128)
+    out_s, tr_s = apc.execute_sharded(arr, compiled, mesh,
+                                      collect_stats=True, block_rows=128)
+    assert np.array_equal(np.asarray(out_l), np.asarray(out_s))
+    st_l = apc.to_ap_stats(tr_l, compiled, 300, 3)
+    st_s = apc.to_ap_stats(tr_s, compiled, 300, 3)
+    _stats_equal(st_l, st_s)
+
+
+def test_apc_sharded_multidevice_subprocess():
+    """Real row-sharding over a 2x2x1 (pod,data,model) mesh must equal the
+    oracle, counters included (subprocess: main process keeps 1 device)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro import apc
+        from repro.core import ap, build_lut_nonblocked, truth_tables as tt
+
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs[:4].reshape(2, 2, 1), ("pod", "data", "model"))
+        r, w, rows = 3, 6, 1000          # not a multiple of 4 shards * block
+        lut = build_lut_nonblocked(tt.full_adder(r))
+        rng = np.random.default_rng(2)
+        a = rng.integers(0, r ** w, rows)
+        b = rng.integers(0, r ** w, rows)
+        arr = jnp.asarray(ap.encode_operands(a, b, r, w))
+        so = ap.APStats(radix=r)
+        out_o = np.asarray(ap.ripple_add(arr, lut, w, 2 * w, stats=so))
+        compiled = apc.compile_named("add", r, w)
+        out_s, tr = apc.execute_sharded(arr, compiled, mesh,
+                                        collect_stats=True, block_rows=64)
+        st = apc.to_ap_stats(tr, compiled, rows, r)
+        assert np.array_equal(out_o, np.asarray(out_s))
+        assert (st.sets, st.resets) == (so.sets, so.resets), (st, so)
+        assert np.array_equal(st.mismatch_hist, so.mismatch_hist)
+        assert (st.n_compare_cycles, st.n_write_cycles) == \\
+               (so.n_compare_cycles, so.n_write_cycles)
+        print("OK")
+    """)], capture_output=True, text=True, env=env, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+def test_apc_ir_validation():
+    lut = build_lut_nonblocked(tt.full_adder(3))
+    with pytest.raises(ValueError):
+        apc.ApplyLUT(lut, (0, 1))                   # width mismatch
+    compiled = apc.compile_named("add", 3, 4)
+    with pytest.raises(ValueError):
+        apc.execute(jnp.zeros((8, 3), jnp.int8), compiled)   # too few cols

@@ -11,7 +11,9 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (CycleBreakError, build_lut_blocked,
                         build_lut_nonblocked, from_callable)
