@@ -8,6 +8,10 @@ structural HBM-traffic/bytes arithmetic for the TPU roofline story).
 3. apc: whole-program compiler (fused pallas executor, traced stats) vs the
    interpreted pass-by-pass apply_lut replay, JSON-emitted so future PRs
    have a perf trajectory (benchmarks/apc_bench.json).
+4. ap matmul: the MAC-program backend (impl="ap") vs the packed Pallas
+   kernel vs the jnp ref across (M, K) — wall time plus the AP cost model
+   (schedule-static compare/write cycles and Table XI energy from the
+   functional-simulator counters), appended to the same JSON trajectory.
 """
 from __future__ import annotations
 
@@ -121,6 +125,59 @@ def bench_apc(rows_list=(1024, 65536), widths=(8, 20),
     return results
 
 
+def bench_ap_matmul(mk_list=((4, 16), (16, 16), (16, 64)), n: int = 8,
+                    radix: int = 3, max_abs: int = 3) -> list[dict]:
+    """AP MAC-program matmul vs packed Pallas kernel vs jnp ref.
+
+    Integer activations (the AP backend's exactness domain).  Wall time on
+    the CPU host tells the simulator-cost story; the AP hardware story is the
+    cycle/energy columns: all M*N outputs share one schedule, so compare/
+    write cycles are (M, N)-independent and the Table XI model (1 nJ/set-or-
+    reset, matchline compare energy) prices the whole matmul.
+    """
+    from repro.core.ap import APStats
+    from repro.core.energy import T_WRITE_NS, energy_from_stats
+    from repro.kernels.ternary_matmul.ap import (ap_matmul_cycle_counts,
+                                                 ternary_matmul_ap)
+    from repro.kernels.ternary_matmul.ops import ternary_matmul_op
+    results = []
+    for m, k in mk_list:
+        rng = np.random.default_rng(m * k)
+        w = jax.random.normal(jax.random.PRNGKey(k), (k, n), jnp.float32) * .05
+        packed, scale = quantize_and_pack(w)
+        x = jnp.asarray(rng.integers(-max_abs, max_abs + 1, (m, k)),
+                        jnp.float32)
+        from repro import apc
+        width = apc.mac_acc_width(radix, k, max_abs)
+        stats = APStats(radix=radix)
+        y_ap = ternary_matmul_ap(x, packed, scale, radix=radix, stats=stats)
+        y_ref = ternary_matmul_ref(x, packed, scale)
+        assert np.array_equal(np.asarray(y_ap), np.asarray(y_ref))
+        ap_us = _time(lambda: ternary_matmul_ap(x, packed, scale,
+                                                radix=radix), n=3)
+        pk_us = _time(lambda: ternary_matmul_op(x, packed, scale), n=3)
+        rf_us = _time(lambda: ternary_matmul_ref(x, packed, scale), n=3)
+        cyc = ap_matmul_cycle_counts(radix, packed.shape[0] * 16, width)
+        # 3 LUT columns + 1 weight-predicate column per compare key
+        rep = energy_from_stats(stats, n_masked=4)
+        row = {"bench": "ap_matmul", "m": m, "k": k, "n": n, "radix": radix,
+               "acc_width": width, "ap_us": round(ap_us),
+               "packed_us": round(pk_us), "ref_us": round(rf_us),
+               "write_cycles": cyc["write_cycles"],
+               "compare_cycles": cyc["compare_cycles"],
+               "ap_delay_ns": cyc["write_cycles"] * T_WRITE_NS
+               + cyc["compare_cycles"] * 2.0,
+               "energy_write_j": rep.write_energy_j,
+               "energy_compare_j": rep.compare_energy_j,
+               "energy_total_j": rep.total_j,
+               "sets": int(rep.sets), "resets": int(rep.resets)}
+        results.append(row)
+        print(f"ap_matmul_{m}x{k}x{n},{row['ap_us']},"
+              f"packed={row['packed_us']}us_writes={row['write_cycles']}"
+              f"_E={row['energy_total_j']:.2e}J")
+    return results
+
+
 def main():
     import argparse
     p = argparse.ArgumentParser()
@@ -132,7 +189,14 @@ def main():
     bench_tap()
     bench_ternary()
     rows = (1024, 65536, 1048576) if args.full else (1024, 65536)
-    bench_apc(rows_list=rows, json_path=args.json)
+    # persist after each stage: the interpreted-replay baseline takes
+    # minutes, so a later-stage failure must not discard it
+    apc_rows = bench_apc(rows_list=rows, json_path=args.json)
+    matmul_rows = bench_ap_matmul()
+    with open(args.json, "w") as f:
+        json.dump({"bench": "apc_vs_replay", "results": apc_rows,
+                   "ap_matmul": matmul_rows}, f, indent=2)
+    print(f"apc bench JSON -> {args.json}")
 
 
 if __name__ == "__main__":

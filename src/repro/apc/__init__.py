@@ -37,6 +37,11 @@ IR / compiler concept        Paper concept
                              Table V set/reset rules, mismatch histogram for
                              the matchline energy model) as in-graph
                              reductions.
+``mac.mac_program``          The ternary dot-product as predicated add/sub
+                             sweeps over weight digits — the AP-tutorial
+                             vector-workload claim (Fouda et al. 2022)
+                             compiled onto the serving path
+                             (``ternary_matmul(..., impl="ap")``).
 ==========================  =================================================
 
 Typical use::
@@ -49,23 +54,27 @@ Typical use::
 or via the drivers: ``repro.core.ap.ripple_add(..., engine="apc")``.
 """
 from . import exec as exec  # noqa: PLC0414 — re-export the module
-from . import ir, lower, stats
+from . import ir, lower, mac, stats
 from .exec import execute, execute_sharded, run
-from .ir import (ApplyLUT, CompareWrite, ForDigit, Program, RelCol, SetCol,
-                 ZeroCol, digit)
+from .ir import (AffineCol, ApplyLUT, CompareWrite, ForDigit, Program,
+                 RelCol, SetCol, ZeroCol, digit)
 from .lower import (CompiledProgram, Step, compile_named, compile_program,
                     elementwise_program, lower as lower_program,
                     multiply_program, negate_program, ripple_add_program,
                     ripple_sub_program)
+from .mac import (compile_mac, decode_mac_acc, encode_mac_rows,
+                  mac_acc_width, mac_layout, mac_program)
 from .stats import TracedStats, accumulate, to_ap_stats
 
 __all__ = [
-    "exec", "ir", "lower", "stats",
+    "exec", "ir", "lower", "mac", "stats",
     "execute", "execute_sharded", "run",
-    "ApplyLUT", "CompareWrite", "ForDigit", "Program", "RelCol", "SetCol",
-    "ZeroCol", "digit",
+    "AffineCol", "ApplyLUT", "CompareWrite", "ForDigit", "Program", "RelCol",
+    "SetCol", "ZeroCol", "digit",
     "CompiledProgram", "Step", "compile_named", "compile_program",
     "elementwise_program", "lower_program", "multiply_program",
     "negate_program", "ripple_add_program", "ripple_sub_program",
+    "compile_mac", "decode_mac_acc", "encode_mac_rows", "mac_acc_width",
+    "mac_layout", "mac_program",
     "TracedStats", "accumulate", "to_ap_stats",
 ]

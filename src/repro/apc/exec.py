@@ -19,12 +19,9 @@ import math
 import jax
 import jax.numpy as jnp
 
-try:                                    # jax >= 0.6 public API
-    from jax import shard_map
-except ImportError:                     # jax 0.4/0.5
-    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.ap import APStats
 from ..kernels.tap_pass.kernel import tap_run_program
 from ..kernels.tap_pass.ops import _pad_rows
@@ -98,7 +95,7 @@ def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
 
     spec_in = P(axes if len(axes) > 1 else axes[0])
     f = shard_map(per_shard, mesh=mesh, in_specs=(spec_in,),
-                  out_specs=(spec_in, P()), check_rep=False)
+                  out_specs=(spec_in, P()))
     out, traced = f(padded)
     out = out[:rows]
     if collect_stats:

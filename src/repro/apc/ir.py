@@ -15,9 +15,11 @@ MvCAM array:
   references use :class:`RelCol` affine expressions of the loop variable and
   are resolved at lowering time (the schedule stays fully static).
 
-Column references (``Col``) are either plain ints (physical column) or
-``RelCol`` (loop-relative).  ``digit("i") + base`` / ``base + digit("i")``
-both work.
+Column references (``Col``) are plain ints (physical column), ``RelCol``
+(loop-relative, ``scale * env[var] + offset``), or ``AffineCol`` (a sum of
+scaled loop variables — the MAC generator's ``x_base + k*width + i``
+addressing over nested :class:`ForDigit` loops).  ``digit("i") + base``,
+``base + digit("i")``, ``digit("k") * width + digit("i")`` all work.
 
 Programs are *data*: :mod:`repro.apc.lower` flattens them into one static
 :class:`~repro.apc.lower.Step` schedule which the fused executor
@@ -33,22 +35,64 @@ from ..core.lut import LUT
 
 @dataclass(frozen=True)
 class RelCol:
-    """Affine column expression ``env[var] + offset``."""
+    """Affine column expression ``scale * env[var] + offset``."""
     var: str
     offset: int = 0
+    scale: int = 1
 
-    def __add__(self, k: int) -> "RelCol":
-        return RelCol(self.var, self.offset + int(k))
+    def __add__(self, other) -> "Col":
+        if isinstance(other, int):
+            return RelCol(self.var, self.offset + other, self.scale)
+        if isinstance(other, (RelCol, AffineCol)):
+            return self._affine() + other
+        return NotImplemented
 
     __radd__ = __add__
+
+    def __mul__(self, k: int) -> "RelCol":
+        return RelCol(self.var, self.offset * int(k), self.scale * int(k))
+
+    __rmul__ = __mul__
+
+    def _affine(self) -> "AffineCol":
+        return AffineCol(((self.var, self.scale),), self.offset)
 
     def resolve(self, env: dict[str, int]) -> int:
         if self.var not in env:
             raise KeyError(f"unbound loop variable {self.var!r}")
-        return env[self.var] + self.offset
+        return self.scale * env[self.var] + self.offset
 
 
-Col = Union[int, RelCol]
+@dataclass(frozen=True)
+class AffineCol:
+    """Multi-variable affine column ``sum(scale * env[var]) + offset`` —
+    block addressing over nested :class:`ForDigit` loops, e.g. the MAC
+    generator's ``x_base + k * width + i``."""
+    terms: tuple[tuple[str, int], ...]       # (var, scale)
+    offset: int = 0
+
+    def __add__(self, other) -> "AffineCol":
+        if isinstance(other, int):
+            return AffineCol(self.terms, self.offset + other)
+        if isinstance(other, RelCol):
+            other = other._affine()
+        if isinstance(other, AffineCol):
+            return AffineCol(self.terms + other.terms,
+                             self.offset + other.offset)
+        return NotImplemented
+
+    __radd__ = __add__
+
+    def resolve(self, env: dict[str, int]) -> int:
+        acc = self.offset
+        for var, scale in self.terms:
+            if var not in env:
+                raise KeyError(f"unbound loop variable {var!r}")
+            acc += scale * env[var]
+        return acc
+
+
+Col = Union[int, RelCol, AffineCol]
 
 
 def digit(var: str = "i") -> RelCol:
@@ -57,7 +101,7 @@ def digit(var: str = "i") -> RelCol:
 
 
 def resolve_col(col: Col, env: dict[str, int]) -> int:
-    c = col.resolve(env) if isinstance(col, RelCol) else int(col)
+    c = col.resolve(env) if isinstance(col, (RelCol, AffineCol)) else int(col)
     if c < 0:
         raise ValueError(f"column expression resolved to negative column {c}")
     return c

@@ -1,0 +1,156 @@
+"""AP multiply-accumulate: the ternary dot-product as one fused program.
+
+The paper's in-memory claim applied to the model-serving path: a ternary
+dot-product ``y = sum_k w_k * x_k`` with weights in {-1, 0, +1} needs no
+multiplier at all — it is K predicated in-place add/subtract sweeps on an
+accumulator column group, exactly the §IV multi-digit methodology with every
+compare key extended by the row's weight digit:
+
+- ``w_k = +1``  ->  ``ACC += X_k``  (full-adder sweep, predicate W_k == 2)
+- ``w_k = -1``  ->  ``ACC -= X_k``  (rev-subtractor sweep, predicate W_k == 0)
+- ``w_k =  0``  ->  no row matches either predicate; the sweeps are no-ops.
+
+Every CAM row holds one output cell's operands — for a matmul, row (m, n)
+holds activation vector x[m, :] (radix-r digits), weight column w[:, n]
+(one digit per k, value+1 in {0,1,2}), and the accumulator — so ONE program
+run computes all M*N dot products in parallel, rows being the AP's native
+data-parallel axis.
+
+Arithmetic is mod r^width with radix-complement (signed) encoding: operands
+and accumulator live at the same width, so carries out of the top digit drop
+and no half-adder ripple into upper digits is needed; negative activations
+and negative partial sums cost nothing extra.  :func:`mac_acc_width` picks
+the minimal width for exact signed decode.
+
+Operand-corruption note (§IV.B): the adder/subtractor cycle-breaking pass
+dummy-writes the X column, but unlike :func:`~repro.apc.lower.
+multiply_program` no repair sweep is needed — each X_k block is consumed by
+exactly one sweep per row (the two predicates are disjoint), so the X
+columns are simply scratch after the run; only ACC is read back.
+
+Programs are compiled once per (radix, K, width) (:func:`compile_mac`,
+lru-cached) and run via the fused sharded executor — one pallas_call per
+row-block for the whole K-term dot product.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from ..core import truth_tables as tt
+from ..core.blocked import build_lut_blocked
+from ..core.lut import LUT
+from ..core.nonblocked import build_lut_nonblocked
+from .ir import ApplyLUT, ForDigit, Op, Program, SetCol, ZeroCol, digit
+from .lower import CompiledProgram, compile_program
+
+# weight trit encoding: stored digit = trit + 1 (valid for any radix >= 3)
+W_MINUS, W_ZERO, W_PLUS = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+
+def mac_layout(K: int, width: int) -> dict[str, int]:
+    """Column bases for the MAC row layout
+    ``[X_0(w) .. X_{K-1}(w) | W(K) | ACC(w) | C]``."""
+    return {"x_base": 0, "w_base": K * width, "acc_base": K * width + K,
+            "carry_col": K * width + K + width,
+            "n_cols": K * (width + 1) + width + 1}
+
+
+def mac_acc_width(radix: int, K: int, max_abs: int) -> int:
+    """Minimal digit width for exact signed (radix-complement) decode of
+    ``sum_k w_k * x_k`` with ``|x_k| <= max_abs`` and ternary weights:
+    smallest p with ``r^p >= 2 * K * max_abs + 1``."""
+    bound = 2 * K * max(1, max_abs) + 1
+    p, hi = 1, radix
+    while hi < bound:
+        p, hi = p + 1, hi * radix
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Program builder
+# ---------------------------------------------------------------------------
+
+def mac_program(lut_add: LUT, lut_rsub: LUT, K: int, width: int,
+                x_base: int = 0, w_base: int | None = None,
+                acc_base: int | None = None, carry_col: int | None = None,
+                zero_acc: bool = True) -> Program:
+    """ACC <- sum_k w_k * X_k, one predicated add + sub sweep per k.
+
+    ``lut_add`` computes B <- A + B + C (:func:`~repro.core.truth_tables.
+    full_adder`), ``lut_rsub`` computes B <- B - A - C (:func:`~repro.core.
+    truth_tables.rev_subtractor`); both keep the accumulator in column 1 so
+    X stays stationary.  Carries wrap mod r^width (radix-complement), so no
+    upper-digit ripple follows the sweeps.
+    """
+    lay = mac_layout(K, width)
+    w_base = lay["w_base"] if w_base is None else w_base
+    acc_base = lay["acc_base"] if acc_base is None else acc_base
+    carry_col = lay["carry_col"] if carry_col is None else carry_col
+    k, i = digit("k"), digit("i")
+    xcol = x_base + k * width + i
+    prog: list[Op] = []
+    if zero_acc:
+        prog.extend(SetCol(acc_base + j, 0) for j in range(width))
+    prog.append(ForDigit("k", 0, K, (
+        ZeroCol(carry_col),
+        ForDigit("i", 0, width, (
+            ApplyLUT(lut_add, (xcol, acc_base + i, carry_col),
+                     extra_key=((w_base + k, W_PLUS),)),)),
+        ZeroCol(carry_col),
+        ForDigit("i", 0, width, (
+            ApplyLUT(lut_rsub, (xcol, acc_base + i, carry_col),
+                     extra_key=((w_base + k, W_MINUS),)),)),
+    )))
+    return tuple(prog)
+
+
+@functools.lru_cache(maxsize=64)
+def compile_mac(radix: int, K: int, width: int, *, blocked: bool = False
+                ) -> CompiledProgram:
+    """Compile the (radix, K, width) MAC program, cached per process."""
+    build = build_lut_blocked if blocked else build_lut_nonblocked
+    lut_add = build(tt.full_adder(radix))
+    lut_rsub = build(tt.rev_subtractor(radix))
+    return compile_program(mac_program(lut_add, lut_rsub, K, width))
+
+
+# ---------------------------------------------------------------------------
+# Row packing / unpacking (host-side numpy)
+# ---------------------------------------------------------------------------
+
+def encode_mac_rows(x: np.ndarray, w_ter: np.ndarray, radix: int,
+                    width: int) -> np.ndarray:
+    """Pack per-row operands into the MAC layout.
+
+    ``x`` [R, K] integers (any sign — stored mod r^width, radix complement),
+    ``w_ter`` [R, K] in {-1, 0, +1}.  ACC and C start at 0.
+    """
+    R, K = x.shape
+    if w_ter.shape != (R, K):
+        raise ValueError(f"w_ter shape {w_ter.shape} != x shape {(R, K)}")
+    if np.abs(w_ter).max(initial=0) > 1:
+        raise ValueError("weights must be ternary in {-1, 0, +1}")
+    lay = mac_layout(K, width)
+    arr = np.zeros((R, lay["n_cols"]), np.int8)
+    xm = np.asarray(x, np.int64) % radix ** width          # [R, K]
+    for i in range(width):
+        arr[:, i:K * width:width] = (xm // radix ** i) % radix
+    arr[:, lay["w_base"]:lay["w_base"] + K] = w_ter + 1
+    return arr
+
+
+def decode_mac_acc(arr: np.ndarray, radix: int, K: int,
+                   width: int) -> np.ndarray:
+    """Signed (radix-complement) decode of the accumulator columns."""
+    lay = mac_layout(K, width)
+    acc = np.zeros(arr.shape[0], np.int64)
+    for i in range(width):
+        acc += arr[:, lay["acc_base"] + i].astype(np.int64) * radix ** i
+    hi = radix ** width
+    return np.where(acc <= (hi - 1) // 2, acc, acc - hi)

@@ -1,0 +1,26 @@
+"""Portability shims for jax APIs that moved between 0.4 and 0.7.
+
+``shard_map`` lived at ``jax.experimental.shard_map.shard_map`` with a
+``check_rep`` flag through jax 0.5, became ``jax.shard_map`` in 0.6, and the
+flag was renamed ``check_vma`` in 0.7.  Every call site in this repo goes
+through :func:`shard_map` below so the supported jax range stays one line.
+"""
+from __future__ import annotations
+
+try:                                    # jax >= 0.6 public API
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4/0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(body, mesh, in_specs, out_specs, check: bool = False):
+    """``shard_map`` with replication checking on/off, any jax >= 0.4.30."""
+    try:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check)
+    except TypeError:                   # pre-0.7 flag name
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check)
+
+
+__all__ = ["shard_map"]

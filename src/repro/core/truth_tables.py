@@ -103,6 +103,21 @@ def full_subtractor(radix: int) -> InPlaceFunction:
     return from_callable(f"full_subtractor_r{radix}", radix, 3, (1, 2), fn)
 
 
+def rev_subtractor(radix: int) -> InPlaceFunction:
+    """(X, A, Bin) -> (X, D, Bout) computing A := (A - X - Bin), borrow out.
+
+    The mirror of :func:`full_subtractor`: the difference lands on the
+    *second* operand column, so an accumulator column can be decremented in
+    place by a stationary operand — the MAC driver's ``ACC -= X_k`` sweep
+    (predicated on a weight digit of -1).
+    """
+    def fn(x):
+        a, b, c = x
+        d = b - a - c
+        return (a, d % radix, 1 if d < 0 else 0)
+    return from_callable(f"rev_subtractor_r{radix}", radix, 3, (1, 2), fn)
+
+
 def half_adder(radix: int) -> InPlaceFunction:
     """(B, C) -> (S, Cout) with S = (B + C) % r — used to fold a carry in."""
     def fn(x):
@@ -170,6 +185,7 @@ def tnot_copy(radix: int) -> InPlaceFunction:
 REGISTRY: dict[str, Callable[[int], InPlaceFunction]] = {
     "full_adder": full_adder,
     "full_subtractor": full_subtractor,
+    "rev_subtractor": rev_subtractor,
     "half_adder": half_adder,
     "min": tmin,
     "max": tmax,

@@ -1,4 +1,28 @@
-from . import kernel, ops, ref
-from .ops import quantize_and_pack, ternary_matmul_op
+"""Packed balanced-ternary matmul: three backends behind one dispatcher.
 
-__all__ = ["kernel", "ops", "ref", "quantize_and_pack", "ternary_matmul_op"]
+``ternary_matmul(x, packed, scale, impl=...)`` routes to:
+
+- ``impl="ref"`` — pure-jnp oracle (:mod:`.ref`): unpack the 2-bit weights
+  to a dense fp32 matrix and ``jnp.dot``.  Correctness baseline for the
+  other two and the only backend with no shape constraints; use it in tests
+  and for one-off host math.
+- ``impl="pallas"`` (default) — the packed-weight tiled Pallas kernel
+  (:mod:`.kernel` via :func:`~.ops.ternary_matmul_op`): weights stay 2-bit
+  in HBM and unpack in VMEM, so the weight-traffic term of a decode-shape
+  matmul drops ~8x vs bf16.  Wins whenever wall-clock or HBM bandwidth is
+  the metric — the production serving path.
+- ``impl="ap"`` — the associative-processor MAC program (:mod:`.ap`): every
+  output cell is a CAM row and the dot product runs as predicated in-place
+  add/sub sweeps compiled by :func:`repro.apc.compile_mac` — multiplier-free
+  compare/write cycles, the paper's in-memory arithmetic on the serving
+  path.  Exact integer arithmetic (activations must be integer-valued) with
+  per-matmul cycle counts for the Table XI energy model.  Wins when the
+  question is "what would this cost on AP hardware", as a bit-exact
+  cross-check of the packed kernel, or when weights AND activations are
+  already trits and energy — not FLOPs — is the budget.
+"""
+from . import ap, kernel, ops, ref
+from .ops import quantize_and_pack, ternary_matmul, ternary_matmul_op
+
+__all__ = ["ap", "kernel", "ops", "ref", "quantize_and_pack",
+           "ternary_matmul", "ternary_matmul_op"]

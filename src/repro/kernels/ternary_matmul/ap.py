@@ -1,0 +1,95 @@
+"""AP backend for the packed-ternary matmul (impl="ap").
+
+Runs the whole M x N output tile as ONE fused associative-processor program:
+row (m, n) of the MvCAM array holds activation vector x[m, :] as radix-r
+digit groups, weight column w[:, n] as K trit digits, and an accumulator;
+:func:`repro.apc.compile_mac` compiles the K-term predicated add/subtract
+schedule once per (radix, K, width) and the sharded executor replays it with
+one pallas_call per row-block (:mod:`repro.apc.exec`).
+
+This is the paper's in-memory arithmetic applied to serving: no multiplier,
+no MXU — compare/write cycles only, with the functional-simulator counters
+(write cycles -> Table XI energy) available per matmul.  It is exact integer
+arithmetic, so activations must be integer-valued (quantized activations,
+integer token counts, ...); for float activations use the packed Pallas
+kernel.  Useful today as a bit-exact cross-check of the packed kernel and as
+the cost model for an AP accelerator running the serving path; wall-clock on
+a TPU/CPU host it loses to the MXU-backed kernel by design.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ref import unpack_ternary
+
+__all__ = ["ternary_matmul_ap", "ap_matmul_cycle_counts"]
+
+
+def _as_int_activations(x: jax.Array) -> np.ndarray:
+    xn = np.asarray(x, np.float64)
+    xi = np.rint(xn).astype(np.int64)
+    if not np.array_equal(xi.astype(np.float64), xn):
+        raise ValueError(
+            "impl='ap' runs exact integer AP arithmetic: activations must "
+            "be integer-valued (got non-integer entries); quantize x first "
+            "or use impl='pallas'")
+    return xi
+
+
+def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                      *, radix: int = 3, width: int | None = None,
+                      mesh=None, stats=None, block_rows: int | None = None,
+                      blocked: bool = False,
+                      interpret: bool = True) -> jax.Array:
+    """y[M, N] = (x @ unpack(packed)) * scale on the AP program executor.
+
+    ``x`` [M, K] integer-valued; ``packed``/``scale`` as produced by
+    :func:`~repro.kernels.ternary_matmul.ops.quantize_and_pack`.  ``width``
+    (accumulator digits) defaults to the minimal exact width for the
+    observed activation range.  ``stats`` (an :class:`~repro.core.ap.
+    APStats`) collects the functional-simulator counters for the energy
+    model; ``mesh`` shards the M*N row axis.  Bit-exact vs
+    :func:`~repro.kernels.ternary_matmul.ref.ternary_matmul_ref` because the
+    integer accumulator converts to float32 exactly and the final
+    scale-multiply is the same float32 op.
+    """
+    from repro import apc
+
+    xi = _as_int_activations(x)
+    m, kdim = xi.shape
+    w_ter = np.asarray(unpack_ternary(packed, dtype=jnp.int8))     # [K', N]
+    kp, n = w_ter.shape
+    if kdim > kp:
+        raise ValueError(f"x K={kdim} exceeds packed K'={kp}")
+    if kdim < kp:                        # pack-time padding rows: w == 0 there
+        xi = np.concatenate([xi, np.zeros((m, kp - kdim), np.int64)], axis=1)
+    width = width or apc.mac_acc_width(radix, kp,
+                                       int(np.abs(xi).max(initial=1)))
+    compiled = apc.compile_mac(radix, kp, width, blocked=blocked)
+    # row (m, n) <- (x[m, :], w[:, n]): M*N dot products, one program run
+    x_rows = np.repeat(xi, n, axis=0)                              # [M*N, K']
+    w_rows = np.tile(w_ter.T, (m, 1))                              # [M*N, K']
+    arr = jnp.asarray(apc.encode_mac_rows(x_rows, w_rows, radix, width))
+    out = apc.run(arr, compiled, stats=stats, mesh=mesh,
+                  block_rows=block_rows, interpret=interpret)
+    acc = apc.decode_mac_acc(np.asarray(out), radix, kp, width)    # [M*N]
+    y = (jnp.asarray(acc.reshape(m, n), jnp.float32)
+         * jnp.asarray(scale, jnp.float32)[None, :])
+    return y.astype(x.dtype)
+
+
+def ap_matmul_cycle_counts(radix: int, K: int, width: int,
+                           blocked: bool = False) -> dict[str, int]:
+    """Schedule-static AP cycle counts for one (any-size) matmul tile.
+
+    All M*N dot products run row-parallel, so these are the counts of the
+    whole matmul, not per output — the write-cycle number the Table XI
+    energy model charges at 2 ns / cycle.
+    """
+    from repro import apc
+    compiled = apc.compile_mac(radix, K, width, blocked=blocked)
+    return {"compare_cycles": compiled.n_compare_cycles,
+            "write_cycles": compiled.n_write_cycles,
+            "steps": compiled.n_steps, "acc_width": width}

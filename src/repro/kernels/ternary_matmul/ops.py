@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import BK, BM, BN, ternary_matmul
+from .kernel import BK, BM, BN
+from .kernel import ternary_matmul as _ternary_matmul_kernel
 from .ref import PACK, pack_ternary, quantize_ternary, ternary_matmul_ref
 
 
@@ -41,8 +42,30 @@ def ternary_matmul_op(x: jax.Array, packed: jax.Array, scale: jax.Array,
         # 0b01 repeated = ternary 0 everywhere: zero padding weights
     pn = _pad_to(packed, 1, BN)
     sn = _pad_to(scale.reshape(-1), 0, BN)
-    y = ternary_matmul(xk, pn, sn, bm=bm, interpret=interpret)
+    y = _ternary_matmul_kernel(xk, pn, sn, bm=bm, interpret=interpret)
     return y[:m, :n]
+
+
+def ternary_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                   impl: str = "pallas", **kw) -> jax.Array:
+    """Backend dispatcher: y = (x @ unpack(packed)) * scale.
+
+    ``impl`` selects the backend — "pallas" (packed-weight tiled kernel,
+    :func:`ternary_matmul_op`), "ref" (pure-jnp oracle), or "ap" (the
+    associative-processor MAC program, :func:`~repro.kernels.ternary_matmul.
+    ap.ternary_matmul_ap`; extra kwargs like radix/width/mesh/stats pass
+    through).  See the package docstring for when each wins.
+    """
+    if impl in ("pallas", "packed"):
+        return ternary_matmul_op(x, packed, scale, **kw)
+    if impl == "ref":
+        if kw:
+            raise TypeError(f"impl='ref' takes no extra kwargs, got {kw}")
+        return ternary_matmul_ref(x, packed, scale)
+    if impl == "ap":
+        from .ap import ternary_matmul_ap
+        return ternary_matmul_ap(x, packed, scale, **kw)
+    raise ValueError(f"unknown impl {impl!r}; use 'pallas', 'ref', or 'ap'")
 
 
 def quantize_and_pack(w: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -55,5 +78,5 @@ def quantize_and_pack(w: jax.Array) -> tuple[jax.Array, jax.Array]:
     return pack_ternary(w_ter), scale
 
 
-__all__ = ["ternary_matmul_op", "quantize_and_pack", "pack_ternary",
-           "quantize_ternary", "ternary_matmul_ref", "PACK"]
+__all__ = ["ternary_matmul", "ternary_matmul_op", "quantize_and_pack",
+           "pack_ternary", "quantize_ternary", "ternary_matmul_ref", "PACK"]

@@ -74,6 +74,63 @@ def test_apc_multiply_matches_oracle(radix):
     assert np.array_equal(ap.decode_digits(out_f, list(range(w)), radix), a)
 
 
+@pytest.mark.parametrize("fn", ["add", "sub", "mul"])
+def test_apc_radix5_compile_named_vs_oracle(fn):
+    """ROADMAP radix-5 item: the fused compile_named programs (not just the
+    LUT generators) validated end-to-end against the interpreted replay
+    oracle with exact APStats parity, plus numeric ground truth."""
+    r = 5
+    w = 4 if fn != "mul" else 2            # mul oracle replay is O(r^2) sweeps
+    rows = 97
+    rng = np.random.default_rng(50 + sum(map(ord, fn)))
+    a = rng.integers(0, r ** w, rows)
+    b = rng.integers(0, r ** w, rows)
+    lut_add = build_lut_nonblocked(tt.full_adder(r))
+    so, sf = ap.APStats(radix=r), ap.APStats(radix=r)
+    if fn == "mul":
+        arr = np.zeros((rows, 5 * w + 1), np.int8)
+        for i in range(w):
+            arr[:, i] = arr[:, w + i] = (a // r ** i) % r
+            arr[:, 2 * w + i] = (b // r ** i) % r
+        arr = jnp.asarray(arr)
+        lut_half = build_lut_nonblocked(tt.half_adder(r))
+        out_o = np.asarray(ap.multiply(arr, lut_add, lut_half, w, r, 0, w,
+                                       2 * w, 3 * w, 5 * w, stats=so))
+        res_cols, want = list(range(3 * w, 5 * w)), a * b
+    else:
+        arr = jnp.asarray(ap.encode_operands(a, b, r, w))
+        if fn == "add":
+            out_o = np.asarray(ap.ripple_add(arr, lut_add, w, 2 * w,
+                                             stats=so))
+            want = (a + b) % r ** w
+        else:
+            lut_sub = build_lut_nonblocked(tt.full_subtractor(r))
+            out_o = np.asarray(ap.ripple_sub(arr, lut_sub, w, 2 * w,
+                                             stats=so))
+            want = (a - b) % r ** w
+        res_cols = list(range(w, 2 * w))
+    compiled = apc.compile_named(fn, r, w)
+    out_f, traced = apc.execute(arr, compiled, collect_stats=True)
+    assert np.array_equal(out_o, np.asarray(out_f))
+    _stats_equal(so, apc.to_ap_stats(traced, compiled, rows, r))
+    got = ap.decode_digits(np.asarray(out_f), res_cols, r)
+    assert np.array_equal(got, want)
+
+
+def test_apc_affine_col_ir():
+    """IR growth for the MAC: multi-variable affine column expressions."""
+    c = apc.digit("k") * 3 + apc.digit("i") + 7
+    assert isinstance(c, apc.AffineCol)
+    assert c.resolve({"k": 2, "i": 1}) == 14
+    assert (2 + apc.digit("i")).resolve({"i": 5}) == 7
+    assert (apc.digit("i") * 4).resolve({"i": 2}) == 8
+    with pytest.raises(KeyError):
+        c.resolve({"k": 0})
+    from repro.apc.ir import resolve_col
+    with pytest.raises(ValueError):
+        resolve_col(apc.digit("i") + (-3), {"i": 1})
+
+
 def test_apc_blocked_schedule_matches_oracle():
     lut = build_lut_blocked(tt.full_adder(3))
     rng = np.random.default_rng(11)
@@ -202,6 +259,7 @@ def test_apc_sharded_matches_local():
     _stats_equal(st_l, st_s)
 
 
+@pytest.mark.slow              # subprocess with its own jax init + compiles
 def test_apc_sharded_multidevice_subprocess():
     """Real row-sharding over a 2x2x1 (pod,data,model) mesh must equal the
     oracle, counters included (subprocess: main process keeps 1 device)."""

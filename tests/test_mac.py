@@ -1,0 +1,156 @@
+"""AP MAC programs + the ternary_matmul impl="ap" backend.
+
+Acceptance contract (ISSUE 2): the apc dot-product equals the integer
+reference for radix 3/4/5 with exact APStats parity against the interpreted
+replay oracle, and ternary_matmul(..., impl="ap") is bit-exact vs the jnp
+reference on random integer activations.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import apc
+from repro.core import ap, build_lut_nonblocked, truth_tables as tt
+from repro.kernels.ternary_matmul.ap import (ap_matmul_cycle_counts,
+                                             ternary_matmul_ap)
+from repro.kernels.ternary_matmul.ops import (quantize_and_pack,
+                                              ternary_matmul)
+from repro.kernels.ternary_matmul.ref import pack_ternary, ternary_matmul_ref
+
+
+def _stats_equal(a: ap.APStats, b: ap.APStats) -> None:
+    assert (a.sets, a.resets) == (b.sets, b.resets)
+    assert (a.n_compare_cycles, a.n_write_cycles) == \
+        (b.n_compare_cycles, b.n_write_cycles)
+    assert np.array_equal(a.mismatch_hist, b.mismatch_hist)
+
+
+# keep the interpreted-oracle replay cost bounded: passes ~ K * width * r^3
+_ORACLE_SHAPES = {3: (4, 3), 4: (3, 2), 5: (2, 2)}     # radix -> (K, width)
+
+
+@pytest.mark.parametrize("radix", [3, 4, 5])
+def test_mac_fused_matches_oracle_and_integers(radix):
+    K, width = _ORACLE_SHAPES[radix]
+    rows = 61
+    rng = np.random.default_rng(radix * 11)
+    max_abs = (radix ** width - 1) // (2 * K)          # exact-decode range
+    x = rng.integers(-max_abs, max_abs + 1, (rows, K))
+    w = rng.integers(-1, 2, (rows, K))
+    arr = jnp.asarray(apc.encode_mac_rows(x, w, radix, width))
+    lut_add = build_lut_nonblocked(tt.full_adder(radix))
+    lut_rsub = build_lut_nonblocked(tt.rev_subtractor(radix))
+    so, sf = ap.APStats(radix=radix), ap.APStats(radix=radix)
+    out_o = np.asarray(ap.mac(arr, lut_add, lut_rsub, K, width, stats=so))
+    out_f = np.asarray(ap.mac(arr, lut_add, lut_rsub, K, width, stats=sf,
+                              engine="apc"))
+    assert np.array_equal(out_o, out_f)
+    _stats_equal(so, sf)
+    want = (x * w).sum(axis=1)
+    assert np.array_equal(apc.decode_mac_acc(out_f, radix, K, width), want)
+
+
+@pytest.mark.parametrize("radix", [3, 4, 5])
+def test_mac_random_dot_products_match_integers(radix):
+    """Seeded random property sweep: many (K, x, w) draws per radix, fused
+    executor only (the oracle pairing is covered above)."""
+    rng = np.random.default_rng(radix * 101)
+    for trial in range(6):
+        K = int(rng.integers(1, 9))
+        max_abs = int(rng.integers(1, 6))
+        width = apc.mac_acc_width(radix, K, max_abs)
+        rows = int(rng.integers(1, 80))
+        x = rng.integers(-max_abs, max_abs + 1, (rows, K))
+        w = rng.integers(-1, 2, (rows, K))
+        arr = jnp.asarray(apc.encode_mac_rows(x, w, radix, width))
+        compiled = apc.compile_mac(radix, K, width)
+        out, _ = apc.execute(arr, compiled)
+        got = apc.decode_mac_acc(np.asarray(out), radix, K, width)
+        assert np.array_equal(got, (x * w).sum(axis=1)), \
+            (radix, K, max_abs, width, rows)
+
+
+@pytest.mark.parametrize("radix", [3, 4, 5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ternary_matmul_ap_bitexact_vs_ref(radix, dtype):
+    rng = np.random.default_rng(radix * 7)
+    m, k, n = 5, 24, 6
+    w = jnp.asarray(rng.normal(0, 0.05, (k, n)), jnp.float32)
+    packed, scale = quantize_and_pack(w)
+    x = jnp.asarray(rng.integers(-4, 5, (m, k)), dtype)
+    st = ap.APStats(radix=radix)
+    y_ap = ternary_matmul(x, packed, scale, impl="ap", radix=radix, stats=st)
+    y_ref = ternary_matmul_ref(x, packed, scale)
+    assert y_ap.dtype == y_ref.dtype == dtype
+    assert np.array_equal(np.asarray(y_ap, np.float32),
+                          np.asarray(y_ref, np.float32))
+    assert st.n_write_cycles == ap_matmul_cycle_counts(
+        radix, packed.shape[0] * 16,
+        apc.mac_acc_width(radix, packed.shape[0] * 16, 4))["write_cycles"]
+
+
+def test_ternary_matmul_ap_k_padding():
+    """x K smaller than packed K' (pack-time zero rows) must still be exact."""
+    rng = np.random.default_rng(3)
+    k = 19                                  # pads to K' = 32
+    w = jnp.asarray(rng.normal(0, 0.05, (k, 4)), jnp.float32)
+    packed, scale = quantize_and_pack(w)
+    x = jnp.asarray(rng.integers(-2, 3, (3, k)), jnp.float32)
+    y_ap = ternary_matmul_ap(x, packed, scale)
+    y_ref = ternary_matmul_ref(x, packed, scale)
+    assert np.array_equal(np.asarray(y_ap), np.asarray(y_ref))
+
+
+def test_ternary_matmul_ap_rejects_float_activations():
+    w_t = jnp.asarray(np.ones((16, 2), np.int8))
+    packed = pack_ternary(w_t)
+    scale = jnp.ones((2,), jnp.float32)
+    x = jnp.full((2, 16), 0.5, jnp.float32)
+    with pytest.raises(ValueError, match="integer-valued"):
+        ternary_matmul_ap(x, packed, scale)
+
+
+def test_mac_cycle_counts_static_and_rows_independent():
+    """Compare/write cycles are schedule-static (row-parallel): the compiled
+    counts follow the per-LUT formula and don't depend on M*N."""
+    radix, K, width = 3, 5, 4
+    lut_add = build_lut_nonblocked(tt.full_adder(radix))
+    lut_rsub = build_lut_nonblocked(tt.rev_subtractor(radix))
+    compiled = apc.compile_mac(radix, K, width)
+    want_writes = width + K * (2 + width * (lut_add.n_write_cycles
+                                            + lut_rsub.n_write_cycles))
+    want_compares = K * width * (lut_add.n_compare_cycles
+                                 + lut_rsub.n_compare_cycles)
+    assert compiled.n_write_cycles == want_writes
+    assert compiled.n_compare_cycles == want_compares
+    assert apc.compile_mac(radix, K, width) is compiled       # lru cache
+    cyc = ap_matmul_cycle_counts(radix, K, width)
+    assert cyc["write_cycles"] == want_writes
+    assert cyc["compare_cycles"] == want_compares
+
+
+def test_mac_sharded_matches_local():
+    from repro.launch.mesh import make_smoke_mesh
+    mesh = make_smoke_mesh()
+    radix, K, width = 3, 4, 3
+    rng = np.random.default_rng(17)
+    x = rng.integers(-3, 4, (120, K))
+    w = rng.integers(-1, 2, (120, K))
+    arr = jnp.asarray(apc.encode_mac_rows(x, w, radix, width))
+    compiled = apc.compile_mac(radix, K, width)
+    out_l, tr_l = apc.execute(arr, compiled, collect_stats=True,
+                              block_rows=64)
+    out_s, tr_s = apc.execute_sharded(arr, compiled, mesh,
+                                      collect_stats=True, block_rows=64)
+    assert np.array_equal(np.asarray(out_l), np.asarray(out_s))
+    _stats_equal(apc.to_ap_stats(tr_l, compiled, 120, radix),
+                 apc.to_ap_stats(tr_s, compiled, 120, radix))
+
+
+def test_encode_mac_rows_validation():
+    with pytest.raises(ValueError, match="ternary"):
+        apc.encode_mac_rows(np.ones((2, 3), int), 2 * np.ones((2, 3), int),
+                            3, 2)
+    with pytest.raises(ValueError, match="shape"):
+        apc.encode_mac_rows(np.ones((2, 3), int), np.ones((2, 4), int), 3, 2)

@@ -5,7 +5,9 @@
 2. The blocked schedule never uses more write cycles than non-blocked.
 3. The AP simulator's multi-digit ripple add equals integer addition for
    random radix/width/operands.
-4. Ternary pack/unpack roundtrips; quantization STE bounds error by scale.
+4. The apc MAC program (ternary dot-product) equals the integer reference
+   for radix 3/4/5 with monotone stats counters.
+5. Ternary pack/unpack roundtrips; quantization STE bounds error by scale.
 """
 import itertools
 
@@ -94,6 +96,38 @@ def test_ap_blocked_equals_nonblocked(radix, width, seed):
     o1 = np.asarray(ap.ripple_add(arr, nb, width, carry_col=2 * width))
     o2 = np.asarray(ap.ripple_add(arr, bl, width, carry_col=2 * width))
     assert np.array_equal(o1, o2)
+
+
+@given(st.integers(3, 5), st.integers(1, 4), st.integers(1, 24),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_mac_program_matches_integer_reference(radix, K, rows, seed):
+    """ISSUE 2 satellite: random ternary activations AND weights — the apc
+    dot-product equals the integer reference for radix 3/4/5, and the stats
+    counters are monotone across successive runs on one APStats."""
+    import jax.numpy as jnp
+    from repro import apc
+    from repro.core.ap import APStats
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-1, 2, (rows, K))            # ternary activations
+    w = rng.integers(-1, 2, (rows, K))            # ternary weights
+    width = apc.mac_acc_width(radix, K, 1)
+    arr = jnp.asarray(apc.encode_mac_rows(x, w, radix, width))
+    compiled = apc.compile_mac(radix, K, width)
+    stats = APStats(radix=radix)
+    out = apc.run(arr, compiled, stats=stats)
+    got = apc.decode_mac_acc(np.asarray(out), radix, K, width)
+    assert np.array_equal(got, (x * w).sum(axis=1))
+    snap = (stats.n_compare_cycles, stats.n_write_cycles, stats.sets,
+            stats.resets, stats.mismatch_hist.copy())
+    assert snap[0] == compiled.n_compare_cycles
+    assert snap[1] == compiled.n_write_cycles
+    apc.run(arr, compiled, stats=stats)           # accumulate a second run
+    assert stats.n_compare_cycles == 2 * snap[0]
+    assert stats.n_write_cycles == 2 * snap[1]
+    assert stats.sets >= snap[2] and stats.resets >= snap[3]
+    assert (stats.mismatch_hist >= snap[4]).all()
+    assert stats.mismatch_hist.sum() == 2 * snap[4].sum()
 
 
 @given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2 ** 31 - 1))

@@ -138,6 +138,7 @@ def test_compressed_dp_step_runs_sharded():
     assert "OK" in out
 
 
+@pytest.mark.slow              # heaviest subprocess compile (~1 min local)
 def test_dryrun_tiny_cell_multipod_axes():
     """End-to-end dry-run machinery on a small fake-multipod mesh: lower +
     compile a reduced arch with (pod,data,model) sharding and read cost/mem
