@@ -12,6 +12,10 @@ structural HBM-traffic/bytes arithmetic for the TPU roofline story).
    kernel vs the jnp ref across (M, K) — wall time plus the AP cost model
    (schedule-static compare/write cycles and Table XI energy from the
    functional-simulator counters), appended to the same JSON trajectory.
+5. ap pool: the array-pool pipelined executor with K-tiled MAC programs —
+   wall-clock and (pipelined) write-cycle scaling vs n_arrays and k_tile
+   under a fixed column budget, the bank-level parallelism story
+   ("ap_pool" trajectory in apc_bench.json).
 """
 from __future__ import annotations
 
@@ -178,6 +182,63 @@ def bench_ap_matmul(mk_list=((4, 16), (16, 16), (16, 64)), n: int = 8,
     return results
 
 
+def bench_ap_pool(m: int = 8, k: int = 96, n: int = 8, radix: int = 3,
+                  max_abs: int = 3, pool_rows: int = 16,
+                  n_arrays_list=(1, 2, 4), k_tile_list=(8, 24),
+                  n_timing: int = 3) -> list[dict]:
+    """Array-pool pipelined executor: wall clock + write cycles vs
+    (n_arrays, k_tile) under a fixed per-array column budget.
+
+    Two scaling stories per row: ``wall_write_cycles`` is the PIPELINED
+    hardware cost (ceil(n_blocks / n_arrays) replay waves per program —
+    more arrays, fewer waves), ``write_cycles`` the schedule total charged
+    to the energy model (sum of tile programs + reduction, independent of
+    n_arrays).  Wall time on the CPU host tracks the simulator's dispatch
+    pipelining.  Output is asserted bit-exact vs the jnp ref every run.
+    """
+    from repro.core.ap import APStats
+    from repro.kernels.ternary_matmul.ap import ternary_matmul_ap
+    results = []
+    rng = np.random.default_rng(7)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32) * .05
+    packed, scale = quantize_and_pack(w)
+    kp = packed.shape[0] * 16
+    x = jnp.asarray(rng.integers(-max_abs, max_abs + 1, (m, k)), jnp.float32)
+    y_ref = ternary_matmul_ref(x, packed, scale)
+    width = apc.mac_acc_width(radix, kp, max_abs)
+    for k_tile in k_tile_list:
+        cols = apc.mac_layout(min(k_tile, kp), width)["n_cols"]
+        tiled = apc.compile_mac_tiled(radix, kp, width, k_tile,
+                                      max_cols=cols)
+        for n_arrays in n_arrays_list:
+            pool = apc.ArrayPool(n_arrays=n_arrays, rows=pool_rows,
+                                 cols=cols)
+            stats = APStats(radix=radix)
+            y = ternary_matmul_ap(x, packed, scale, radix=radix, pool=pool,
+                                  stats=stats)
+            assert np.array_equal(np.asarray(y), np.asarray(y_ref))
+            us = _time(lambda: ternary_matmul_ap(x, packed, scale,
+                                                 radix=radix, pool=pool),
+                       n=n_timing)
+            wall = pool.wall_cycles(m * n, tiled.n_compare_cycles,
+                                    tiled.n_write_cycles)
+            row = {"bench": "ap_pool", "m": m, "k": kp, "n": n,
+                   "radix": radix, "acc_width": width, "k_tile": k_tile,
+                   "n_tiles": len(tiled.tiles), "cols_budget": cols,
+                   "pool_rows": pool_rows, "n_arrays": n_arrays,
+                   "n_blocks": pool.n_blocks(m * n), "us": round(us),
+                   "write_cycles": stats.n_write_cycles,
+                   "compare_cycles": stats.n_compare_cycles,
+                   "waves": wall["waves"],
+                   "wall_write_cycles": wall["write_cycles"],
+                   "wall_compare_cycles": wall["compare_cycles"]}
+            results.append(row)
+            print(f"ap_pool_{m}x{kp}x{n}_a{n_arrays}_kt{k_tile},"
+                  f"{row['us']},waves={row['waves']}_wallwrites="
+                  f"{row['wall_write_cycles']}")
+    return results
+
+
 def main():
     import argparse
     p = argparse.ArgumentParser()
@@ -193,9 +254,11 @@ def main():
     # minutes, so a later-stage failure must not discard it
     apc_rows = bench_apc(rows_list=rows, json_path=args.json)
     matmul_rows = bench_ap_matmul()
+    pool_rows = bench_ap_pool()
     with open(args.json, "w") as f:
         json.dump({"bench": "apc_vs_replay", "results": apc_rows,
-                   "ap_matmul": matmul_rows}, f, indent=2)
+                   "ap_matmul": matmul_rows, "ap_pool": pool_rows}, f,
+                  indent=2)
     print(f"apc bench JSON -> {args.json}")
 
 

@@ -70,6 +70,24 @@ print(f"AP backend (impl='ap'): bit-exact vs ref = "
       f"cycles (row-parallel over all {y_ap.size} cells), "
       f"{rep.total_j*1e9:.1f} nJ by the Table XI model")
 
+# The same matmul on a *bank* of bounded arrays: a column budget that holds
+# only 16-term MAC rows forces K-tiling (4 partial-sum programs + a
+# ripple-add reduction), row blocks stream double-buffered over 2 arrays —
+# still bit-exact, with the pipelined wall-cycle model alongside the
+# schedule totals.
+pool = apc.ArrayPool(n_arrays=2, rows=8,
+                     cols=apc.mac_layout(16, wd)["n_cols"])
+pool_stats = APStats(radix=3)
+y_pool = ternary_matmul(x_int, packed_ap, scale_ap, impl="ap", pool=pool,
+                        stats=pool_stats)
+wall = pool.wall_cycles(y_pool.size, pool_stats.n_compare_cycles,
+                        pool_stats.n_write_cycles)
+print(f"AP pool route ({pool!r}, K tiled 4x16): bit-exact vs ref = "
+      f"{bool((np.asarray(y_pool) == np.asarray(y_ap_ref)).all())}; "
+      f"{pool_stats.n_write_cycles} write cycles charged, "
+      f"{wall['write_cycles']} on the pipelined wall clock "
+      f"({wall['waves']} waves)")
+
 n_proj = sum(p.size for path, p in
              jax.tree_util.tree_flatten_with_path(params)[0]
              if any("mlp" in str(k) or "attn" in str(k) for k in path))

@@ -42,6 +42,14 @@ IR / compiler concept        Paper concept
                              vector-workload claim (Fouda et al. 2022)
                              compiled onto the serving path
                              (``ternary_matmul(..., impl="ap")``).
+``mac.compile_mac_tiled``    The column budget made explicit: reductions
+                             wider than one array split into per-tile
+                             partial-sum programs (radix-complement mod
+                             r^width) + a ripple-add reduction chain.
+``pool.ArrayPool``           The AP *bank*: many bounded MvCAM arrays with
+                             row-blocks double-buffered across them, one
+                             shared schedule tensor, per-launch counters
+                             concatenated into the global stats.
 ==========================  =================================================
 
 Typical use::
@@ -54,7 +62,7 @@ Typical use::
 or via the drivers: ``repro.core.ap.ripple_add(..., engine="apc")``.
 """
 from . import exec as exec  # noqa: PLC0414 — re-export the module
-from . import ir, lower, mac, stats
+from . import ir, lower, mac, pool as pool_mod, stats
 from .exec import execute, execute_sharded, run
 from .ir import (AffineCol, ApplyLUT, CompareWrite, ForDigit, Program,
                  RelCol, SetCol, ZeroCol, digit)
@@ -62,19 +70,26 @@ from .lower import (CompiledProgram, Step, compile_named, compile_program,
                     elementwise_program, lower as lower_program,
                     multiply_program, negate_program, ripple_add_program,
                     ripple_sub_program)
-from .mac import (compile_mac, decode_mac_acc, encode_mac_rows,
-                  mac_acc_width, mac_layout, mac_program)
+from .mac import (TiledMac, compile_mac, compile_mac_reduce,
+                  compile_mac_tiled, decode_mac_acc, decode_mac_acc_jnp,
+                  decode_signed_digits_jnp, encode_mac_rows,
+                  encode_mac_rows_jnp, mac_acc_width, mac_layout,
+                  mac_program, mac_reduce_program)
+from .pool import ArrayPool, run_mac_tiled, run_pooled
 from .stats import TracedStats, accumulate, to_ap_stats
 
 __all__ = [
-    "exec", "ir", "lower", "mac", "stats",
+    "exec", "ir", "lower", "mac", "pool_mod", "stats",
     "execute", "execute_sharded", "run",
     "AffineCol", "ApplyLUT", "CompareWrite", "ForDigit", "Program", "RelCol",
     "SetCol", "ZeroCol", "digit",
     "CompiledProgram", "Step", "compile_named", "compile_program",
     "elementwise_program", "lower_program", "multiply_program",
     "negate_program", "ripple_add_program", "ripple_sub_program",
-    "compile_mac", "decode_mac_acc", "encode_mac_rows", "mac_acc_width",
-    "mac_layout", "mac_program",
+    "TiledMac", "compile_mac", "compile_mac_reduce", "compile_mac_tiled",
+    "decode_mac_acc", "decode_mac_acc_jnp", "decode_signed_digits_jnp",
+    "encode_mac_rows", "encode_mac_rows_jnp", "mac_acc_width", "mac_layout",
+    "mac_program", "mac_reduce_program",
+    "ArrayPool", "run_mac_tiled", "run_pooled",
     "TracedStats", "accumulate", "to_ap_stats",
 ]

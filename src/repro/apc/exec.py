@@ -10,7 +10,9 @@ kernel fori-loops over the packed schedule tensors
 Rows are the data-parallel axis. :func:`execute` runs on whatever device
 holds the array; :func:`execute_sharded` shard_maps row-blocks over the
 ("pod", "data") axes of a :mod:`repro.launch.mesh` device mesh, psumming the
-traced counters so every shard returns the global stats.
+traced counters so every shard returns the global stats; :func:`run` with
+``pool=`` streams row blocks over a bank of bounded MvCAM arrays
+(:mod:`repro.apc.pool`) instead of assuming one unbounded array.
 """
 from __future__ import annotations
 
@@ -47,6 +49,9 @@ def execute(arr: jax.Array, compiled: CompiledProgram, *,
     if cols < compiled.min_cols:
         raise ValueError(
             f"array has {cols} columns, program touches {compiled.min_cols}")
+    if rows == 0:                       # empty batch: no launch, zero counts
+        traced = TracedStats(jnp.zeros((1, 2 + HIST_BINS), jnp.int32))
+        return jnp.asarray(arr, jnp.int8), traced if collect_stats else None
     block_rows = block_rows or min(BLOCK_ROWS, max(8, rows))
     padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), block_rows)
     out, raw = tap_run_program(
@@ -69,6 +74,9 @@ def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
     axes = data_axes(mesh) or tuple(mesh.axis_names[:1])
     n_shards = math.prod(mesh.shape[a] for a in axes)
     rows, cols = arr.shape
+    if rows == 0:                       # empty batch: skip the shard_map
+        return execute(arr, compiled, collect_stats=collect_stats,
+                       block_rows=block_rows, interpret=interpret)
     block_rows = block_rows or min(BLOCK_ROWS,
                                    max(8, -(-rows // n_shards)))
     padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), n_shards * block_rows)
@@ -108,12 +116,26 @@ def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
 # ---------------------------------------------------------------------------
 
 def run(arr: jax.Array, program: Program | CompiledProgram, *,
-        stats: APStats | None = None, mesh=None,
+        stats: APStats | None = None, mesh=None, pool=None,
         block_rows: int | None = None, interpret: bool = True) -> jax.Array:
     """Compile (cached) + execute; optionally merge traced counters into an
-    existing :class:`APStats` (one host sync, after the run completes)."""
+    existing :class:`APStats` (one host sync, after the run completes).
+
+    ``pool`` (an :class:`~repro.apc.pool.ArrayPool`) streams row blocks
+    over a bank of bounded arrays instead of the single resident array;
+    mutually exclusive with ``mesh``.
+    """
     compiled = (program if isinstance(program, CompiledProgram)
                 else compile_program(program))
+    if pool is not None:
+        if mesh is not None:
+            raise ValueError("pass either mesh= or pool=, not both")
+        if block_rows is not None:
+            raise ValueError("block_rows only applies without pool=; the "
+                             "pool's own rows govern block streaming")
+        from .pool import run_pooled                # lazy: import cycle
+        return run_pooled(arr, compiled, pool, stats=stats,
+                          interpret=interpret)
     kw = dict(collect_stats=stats is not None, block_rows=block_rows,
               interpret=interpret)
     if mesh is not None:

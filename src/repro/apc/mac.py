@@ -31,11 +31,25 @@ columns are simply scratch after the run; only ACC is read back.
 Programs are compiled once per (radix, K, width) (:func:`compile_mac`,
 lru-cached) and run via the fused sharded executor — one pallas_call per
 row-block for the whole K-term dot product.
+
+K-tiling (column budget): one MvCAM array has a bounded number of columns,
+and the untiled MAC layout needs ``K*(width+1) + width + 1`` of them — at
+serving-scale K the row simply does not fit.  :func:`compile_mac_tiled`
+splits the reduction axis into ``ceil(K / k_tile)`` tiles, each an ordinary
+(smaller) MAC program producing a radix-complement partial accumulator at
+the SAME width; because the arithmetic is mod ``r^width`` throughout,
+adding the partials (a chain of ripple-add sweeps, :func:`mac_reduce_
+program`) yields digits bit-identical to the untiled program whenever the
+true dot product is decodable at that width.  Tiled cycle counts are the
+exact sum of the tile programs plus the reduction programs.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core import truth_tables as tt
@@ -154,3 +168,193 @@ def decode_mac_acc(arr: np.ndarray, radix: int, K: int,
         acc += arr[:, lay["acc_base"] + i].astype(np.int64) * radix ** i
     hi = radix ** width
     return np.where(acc <= (hi - 1) // 2, acc, acc - hi)
+
+
+# ---------------------------------------------------------------------------
+# Row packing / unpacking (device-side jnp — no host round trip)
+# ---------------------------------------------------------------------------
+
+def encode_mac_rows_jnp(x: jax.Array, w_ter: jax.Array, radix: int,
+                        width: int) -> jax.Array:
+    """Device-side :func:`encode_mac_rows`: pure jnp, no host sync.
+
+    ``x`` [R, K] integer dtype (any sign; digits are the radix-complement
+    residue mod ``r^width``, extracted by iterated floor-div/mod so no
+    ``r^width`` power is ever materialized), ``w_ter`` [R, K] in
+    {-1, 0, +1}.  Weight validity is the CALLER's contract here — unlike
+    the numpy encoder there is no host value check.
+    """
+    R, K = x.shape
+    if w_ter.shape != (R, K):
+        raise ValueError(f"w_ter shape {w_ter.shape} != x shape {(R, K)}")
+    lay = mac_layout(K, width)
+    v = jnp.asarray(x, jnp.int32)
+    digs = []
+    for _ in range(width):
+        # floor div/mod: negative values yield radix-complement digits
+        # (v stays -1 forever once exhausted -> all (r-1) digits)
+        digs.append((v % radix).astype(jnp.int8))
+        v = v // radix
+    xd = jnp.stack(digs, axis=-1).reshape(R, K * width)    # k-major, i-minor
+    wd = (jnp.asarray(w_ter, jnp.int8) + 1)
+    pad = jnp.zeros((R, lay["n_cols"] - lay["acc_base"]), jnp.int8)
+    return jnp.concatenate([xd, wd, pad], axis=1)          # ACC, C start at 0
+
+
+def decode_signed_digits_jnp(digits: jax.Array, radix: int) -> jax.Array:
+    """Signed radix-complement decode of little-endian digit columns, in
+    int32 on device.
+
+    ``digits`` [R, width] int8.  The wrap test (residue > (r^width - 1)/2)
+    is evaluated on two half-words so no intermediate exceeds
+    ``r^ceil(width/2)``; the caller's contract is that the decoded value
+    itself fits int32 (:func:`mac_acc_width` widths for int32-safe dot
+    products always do).
+    """
+    width = digits.shape[1]
+    h = width // 2
+    if radix ** (width - h) > 2 ** 31 - 1:
+        raise ValueError(
+            f"width={width} too wide for int32 device decode at radix "
+            f"{radix}; decode on host with decode_mac_acc instead")
+    d = digits.astype(jnp.int32)
+    lo = sum((d[:, i] * radix ** i for i in range(h)),
+             jnp.zeros(d.shape[0], jnp.int32))
+    hi = sum((d[:, h + i] * radix ** i for i in range(width - h)),
+             jnp.zeros(d.shape[0], jnp.int32))
+    half = (radix ** width - 1) // 2
+    half_lo, half_hi = half % radix ** h, half // radix ** h
+    neg = (hi > half_hi) | ((hi == half_hi) & (lo > half_lo))
+    return lo + (hi - neg * radix ** (width - h)) * radix ** h
+
+
+def decode_mac_acc_jnp(arr: jax.Array, radix: int, K: int,
+                       width: int) -> jax.Array:
+    """Device-side :func:`decode_mac_acc` (int32, no host sync)."""
+    base = mac_layout(K, width)["acc_base"]
+    return decode_signed_digits_jnp(arr[:, base:base + width], radix)
+
+
+# ---------------------------------------------------------------------------
+# K-tiling: per-tile partial-sum programs + ripple-add reduction
+# ---------------------------------------------------------------------------
+
+def mac_reduce_program(lut_add: LUT, width: int, n_parts: int) -> Program:
+    """Fold ``n_parts`` radix-complement partials into the LAST one.
+
+    Layout ``[P_0(w) | .. | P_{n_parts-1}(w) | C]``: a chain of ripple-add
+    sweeps P_t += P_{t-1} (t = 1..n_parts-1), each mod ``r^width`` (the
+    carry out of the top digit is dropped with the final carry-clear, the
+    same radix-complement wrap as the MAC itself).  The reduced sum lands
+    in the P_{n_parts-1} digit block.
+    """
+    if n_parts < 2:
+        raise ValueError(f"reduction needs >= 2 partials, got {n_parts}")
+    carry = n_parts * width
+    i = digit("i")
+    prog: list[Op] = []
+    for t in range(1, n_parts):
+        prog.append(ZeroCol(carry))
+        prog.append(ForDigit("i", 0, width, (
+            ApplyLUT(lut_add,
+                     ((t - 1) * width + i, t * width + i, carry)),)))
+    return tuple(prog)
+
+
+@functools.lru_cache(maxsize=64)
+def compile_mac_reduce(radix: int, width: int, n_parts: int, *,
+                       blocked: bool = False) -> CompiledProgram:
+    """Compile (cached) the ``n_parts``-way partial-sum reduction."""
+    build = build_lut_blocked if blocked else build_lut_nonblocked
+    lut_add = build(tt.full_adder(radix))
+    return compile_program(mac_reduce_program(lut_add, width, n_parts))
+
+
+class TiledMac(NamedTuple):
+    """A K-tiled MAC: per-tile partial-sum programs + a reduction chain.
+
+    ``tiles[t] = (k_lo, k_hi)`` is the reduction-axis slice of tile ``t``
+    (program ``programs[t]``, an ordinary :func:`compile_mac` at
+    ``K = k_hi - k_lo``).  ``reduce_groups[j]`` partials feed reduction
+    program ``reduce_programs[j]``; after the first group, each group's
+    first partial is the previous group's result (chained when the
+    reduction row itself would blow the column budget).
+    """
+    radix: int
+    K: int
+    width: int
+    k_tile: int
+    tiles: tuple[tuple[int, int], ...]
+    programs: tuple[CompiledProgram, ...]
+    reduce_groups: tuple[int, ...]
+    reduce_programs: tuple[CompiledProgram, ...]
+
+    @property
+    def n_write_cycles(self) -> int:
+        """Exact total: sum of tile programs + reduction programs."""
+        return (sum(p.n_write_cycles for p in self.programs)
+                + sum(p.n_write_cycles for p in self.reduce_programs))
+
+    @property
+    def n_compare_cycles(self) -> int:
+        return (sum(p.n_compare_cycles for p in self.programs)
+                + sum(p.n_compare_cycles for p in self.reduce_programs))
+
+    @property
+    def min_cols(self) -> int:
+        """Widest row any constituent program touches."""
+        return max(p.min_cols for p in self.programs + self.reduce_programs)
+
+
+def _reduce_plan(n_parts: int, width: int, max_cols: int | None
+                 ) -> tuple[int, ...]:
+    """Group sizes for the reduction chain under a column budget.
+
+    A ``g``-way reduction row needs ``g*width + 1`` columns; when all
+    ``n_parts`` partials fit one row the plan is a single group, otherwise
+    each later group reuses the previous group's result as its first
+    partial (consuming ``g - 1`` fresh partials).
+    """
+    if n_parts < 2:
+        return ()
+    cap = n_parts if max_cols is None else (max_cols - 1) // width
+    if cap < 2:
+        raise ValueError(
+            f"column budget {max_cols} cannot hold a 2-way reduction of "
+            f"width-{width} partials ({2 * width + 1} columns needed)")
+    groups = [min(n_parts, cap)]
+    left = n_parts - groups[0]
+    while left:
+        g = min(left + 1, cap)
+        groups.append(g)
+        left -= g - 1
+    return tuple(groups)
+
+
+def compile_mac_tiled(radix: int, K: int, width: int, k_tile: int, *,
+                      blocked: bool = False, max_cols: int | None = None
+                      ) -> TiledMac:
+    """Compile the K-tiled MAC: ``ceil(K / k_tile)`` partial-sum programs
+    plus the ripple-add reduction chain (``max_cols`` bounds the reduction
+    row too).  Bit-exact vs :func:`compile_mac` at the same width — the
+    partials and their sum all wrap mod ``r^width`` (radix complement), so
+    tiling never changes the final residue digits.
+    """
+    if k_tile < 1:
+        raise ValueError(f"k_tile must be >= 1, got {k_tile}")
+    if K < 1:
+        raise ValueError(f"K must be >= 1, got {K}")
+    if max_cols is not None:
+        tile_cols = mac_layout(min(k_tile, K), width)["n_cols"]
+        if tile_cols > max_cols:
+            raise ValueError(
+                f"k_tile={k_tile} MAC rows need {tile_cols} columns, "
+                f"budget is {max_cols}")
+    tiles = tuple((lo, min(K, lo + k_tile)) for lo in range(0, K, k_tile))
+    programs = tuple(compile_mac(radix, hi - lo, width, blocked=blocked)
+                     for lo, hi in tiles)
+    groups = _reduce_plan(len(tiles), width, max_cols)
+    reduce_programs = tuple(
+        compile_mac_reduce(radix, width, g, blocked=blocked) for g in groups)
+    return TiledMac(radix, K, width, k_tile, tiles, programs, groups,
+                    reduce_programs)

@@ -1,0 +1,245 @@
+"""Array-pool pipelined executor: many MvCAM arrays, one schedule.
+
+The paper's AP is not one array — it is a *bank* of MvCAM arrays, each with
+a bounded row count and column budget (the same bank-level parallelism
+PRIME-style partitioning and IMPLY-style in-memristor logic use to scale
+in-memory arithmetic).  :class:`ArrayPool` models that bank for the fused
+program executor:
+
+- **Column budget.**  A program only runs if its ``min_cols`` fits the
+  pool's per-array ``cols``; serving-scale MAC programs that do not fit go
+  through the K-tiled compile (:func:`~repro.apc.mac.compile_mac_tiled`)
+  whose per-tile partial sums and reduction rows all respect the budget.
+- **Row-block streaming.**  An input taller than one array streams through
+  the pool in ``rows``-row blocks, block ``b`` on array ``b % n_arrays``.
+  Dispatch is double-buffered: array *i*'s launch is issued asynchronously
+  and array *i+1*'s block is encoded/dispatched while it runs; at most
+  ``2 * n_arrays`` launches stay in flight before backpressure (the oldest
+  launch is drained first), which is exactly the two-deep per-array buffer
+  a hardware sequencer would keep.
+- **One schedule tensor.**  The packed schedule of a
+  :class:`~repro.apc.lower.CompiledProgram` is uploaded once per pool and
+  shared by every launch (the AP sequencer's single microcode store), so
+  per-block dispatch moves only digit rows.
+- **Global stats.**  Per-launch :class:`~repro.apc.stats.TracedStats`
+  counters are concatenated (sets/resets/histogram are row sums, invariant
+  to how rows were split across arrays), so ``accumulate`` yields APStats
+  bit-identical to a single-array :func:`~repro.apc.exec.execute` — the
+  schedule-static compare/write cycles are charged once per program, the
+  row-parallel cost model.  :meth:`ArrayPool.wall_cycles` gives the
+  *pipelined* wall-clock cycle count instead:
+  ``ceil(n_blocks / n_arrays) * program_cycles``.
+
+:func:`run_mac_tiled` drives a whole K-tiled ternary MAC through the pool:
+device-side encode of each tile's rows, one pooled run per tile program,
+then the ripple-add reduction chain over the partial-accumulator digit
+blocks, with every program's counters folded into one APStats.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ap import APStats
+from ..kernels.tap_pass.kernel import tap_run_program
+from ..kernels.tap_pass.ops import _pad_rows
+from .lower import CompiledProgram
+from .mac import (TiledMac, decode_signed_digits_jnp, encode_mac_rows_jnp,
+                  mac_layout)
+from .stats import HIST_BINS, TracedStats, accumulate
+
+
+class ArrayPool:
+    """A bank of ``n_arrays`` MvCAM arrays of ``rows`` x ``cols`` digits."""
+
+    def __init__(self, n_arrays: int = 4, rows: int = 4096,
+                 cols: int = 256):
+        if n_arrays < 1:
+            raise ValueError(f"n_arrays must be >= 1, got {n_arrays}")
+        if rows < 1 or cols < 1:
+            raise ValueError(f"array shape {rows}x{cols} must be positive")
+        self.n_arrays = n_arrays
+        self.rows = rows
+        self.cols = cols
+        # one uploaded schedule per compiled program, shared by every
+        # launch; the CompiledProgram is pinned in the value so its id
+        # (the key) can never be recycled onto a different program
+        self._schedules: dict[
+            int, tuple[CompiledProgram, tuple[jax.Array, ...]]] = {}
+        self._max_schedules = 64
+
+    def __repr__(self) -> str:
+        return (f"ArrayPool(n_arrays={self.n_arrays}, rows={self.rows}, "
+                f"cols={self.cols})")
+
+    # -- schedule store -----------------------------------------------------
+
+    def _device_schedule(self, compiled: CompiledProgram
+                         ) -> tuple[jax.Array, ...]:
+        hit = self._schedules.get(id(compiled))
+        if hit is not None:
+            return hit[1]
+        sched = tuple(jnp.asarray(t) for t in (
+            compiled.cmp_cols, compiled.keys, compiled.key_valid,
+            compiled.hist_flag, compiled.wr_cols, compiled.wr_vals))
+        while len(self._schedules) >= self._max_schedules:   # FIFO evict
+            self._schedules.pop(next(iter(self._schedules)))
+        self._schedules[id(compiled)] = (compiled, sched)
+        return sched
+
+    # -- cost model ---------------------------------------------------------
+
+    def n_blocks(self, n_rows: int) -> int:
+        return -(-n_rows // self.rows)
+
+    def wall_cycles(self, n_rows: int, n_compare_cycles: int,
+                    n_write_cycles: int) -> dict[str, int]:
+        """Pipelined wall-clock cycles: arrays run blocks in parallel, so a
+        program over ``n_rows`` costs ``ceil(n_blocks / n_arrays)``
+        sequential replays per array."""
+        waves = max(1, -(-self.n_blocks(max(1, n_rows)) // self.n_arrays))
+        return {"waves": waves,
+                "compare_cycles": waves * n_compare_cycles,
+                "write_cycles": waves * n_write_cycles}
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, arr: jax.Array, compiled: CompiledProgram, *,
+            collect_stats: bool = False, interpret: bool = True
+            ) -> tuple[jax.Array, TracedStats | None]:
+        """Stream [rows, cols] digit rows through the pool.
+
+        Output and (when ``collect_stats``) accumulated APStats are
+        bit-identical to single-array :func:`~repro.apc.exec.execute`.
+        """
+        n_rows, n_cols = arr.shape
+        if compiled.min_cols > self.cols:
+            raise ValueError(
+                f"program touches {compiled.min_cols} columns, pool arrays "
+                f"have {self.cols} — compile a tiled program "
+                f"(compile_mac_tiled) or widen the pool")
+        if n_cols < compiled.min_cols:
+            raise ValueError(
+                f"array has {n_cols} columns, program touches "
+                f"{compiled.min_cols}")
+        if n_cols > self.cols:
+            raise ValueError(
+                f"rows carry {n_cols} digit columns, pool arrays hold "
+                f"{self.cols}")
+        if n_rows == 0:
+            empty = jnp.zeros((1, 2 + HIST_BINS), jnp.int32)
+            return (jnp.asarray(arr, jnp.int8),
+                    TracedStats(empty) if collect_stats else None)
+        sched = self._device_schedule(compiled)
+        arr = jnp.asarray(arr, jnp.int8)
+        in_flight: list[tuple[jax.Array, jax.Array | None, int]] = []
+        outs: list[jax.Array] = []
+        counts: list[jax.Array] = []
+
+        def drain(slot):
+            out, raw, valid = slot
+            outs.append(out[:valid])
+            if raw is not None:
+                counts.append(raw)
+
+        for b in range(self.n_blocks(n_rows)):
+            lo = b * self.rows
+            block = arr[lo:min(lo + self.rows, n_rows)]
+            valid = block.shape[0]
+            padded, _ = _pad_rows(block, self.rows)
+            # async dispatch: this launch targets array b % n_arrays while
+            # the next iteration encodes the following block (double
+            # buffering); bound in-flight launches to 2 per array
+            out, raw = tap_run_program(
+                padded, *sched, jnp.int32(valid), block_rows=self.rows,
+                collect_stats=collect_stats, hist_bins=HIST_BINS,
+                interpret=interpret)
+            in_flight.append((out, raw, valid))
+            if len(in_flight) >= 2 * self.n_arrays:
+                oldest = in_flight.pop(0)
+                jax.block_until_ready(oldest[0])
+                drain(oldest)
+        for slot in in_flight:
+            drain(slot)
+        out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+        traced = None
+        if collect_stats:
+            traced = TracedStats(jnp.concatenate(counts, axis=0))
+        return out, traced
+
+
+def run_pooled(arr: jax.Array, compiled: CompiledProgram, pool: ArrayPool,
+               *, stats: APStats | None = None,
+               interpret: bool = True) -> jax.Array:
+    """Driver-style front door: pool.run + optional APStats accumulate
+    (mirrors :func:`repro.apc.exec.run` for the single-array path)."""
+    out, traced = pool.run(arr, compiled, collect_stats=stats is not None,
+                           interpret=interpret)
+    if stats is not None:
+        accumulate(stats, traced, compiled, n_rows=arr.shape[0])
+    return out
+
+
+def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
+                  pool: ArrayPool | None = None,
+                  stats: APStats | None = None,
+                  block_rows: int | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """ACC = sum_k w_k * x_k through the K-tiled programs, over a pool.
+
+    ``x`` [R, K] integer dtype, ``w_ter`` [R, K] in {-1, 0, +1} (device
+    arrays; encode is pure jnp).  Each tile's partial-accumulator digit
+    block is carried forward on device into the ripple-add reduction rows;
+    the return value is the signed int32 dot product per row, decoded on
+    device — the caller's conversion is the ONE host sync.
+
+    ``pool=None`` runs every program on the single-array executor (same
+    digits, same counters) — the tiled-vs-untiled equivalence oracle.
+    """
+    from .exec import execute                       # lazy: import cycle
+    R, K = x.shape
+    if K != tiled.K:
+        raise ValueError(f"x has K={K}, tiled program compiled for "
+                         f"K={tiled.K}")
+    if pool is not None and block_rows is not None:
+        raise ValueError("block_rows only applies without pool=; the "
+                         "pool's own rows govern block streaming")
+    radix, width = tiled.radix, tiled.width
+
+    def _run(arr, compiled):
+        if pool is not None:
+            out, traced = pool.run(arr, compiled,
+                                   collect_stats=stats is not None,
+                                   interpret=interpret)
+        else:
+            out, traced = execute(arr, compiled,
+                                  collect_stats=stats is not None,
+                                  block_rows=block_rows,
+                                  interpret=interpret)
+        if stats is not None:
+            accumulate(stats, traced, compiled, n_rows=R)
+        return out
+
+    partials: list[jax.Array] = []                  # [R, width] digit blocks
+    for (lo, hi), prog in zip(tiled.tiles, tiled.programs):
+        kt = hi - lo
+        arr_t = encode_mac_rows_jnp(x[:, lo:hi], w_ter[:, lo:hi], radix,
+                                    width)
+        out = _run(arr_t, prog)
+        base = mac_layout(kt, width)["acc_base"]
+        partials.append(out[:, base:base + width])
+    nxt = 0
+    for g, prog in zip(tiled.reduce_groups, tiled.reduce_programs):
+        fresh = g if nxt == 0 else g - 1            # later groups carry one
+        group = partials[nxt:nxt + fresh]
+        if nxt:
+            group = [carried] + group
+        nxt += fresh
+        arr_r = jnp.concatenate(
+            group + [jnp.zeros((R, 1), jnp.int8)], axis=1)
+        out = _run(arr_r, prog)
+        carried = out[:, (g - 1) * width:g * width]
+    final = carried if tiled.reduce_groups else partials[0]
+    return decode_signed_digits_jnp(final, radix)

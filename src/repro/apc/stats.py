@@ -74,5 +74,10 @@ def accumulate(stats: APStats, traced: TracedStats,
     stats.n_write_cycles += compiled.n_write_cycles
     stats.n_rows = max(stats.n_rows, n_rows)
     hist = counts[:, 2:].sum(axis=0)
+    nb = len(stats.mismatch_hist)
+    if len(hist) > nb:
+        # never drop histogram mass: the final APStats bin is ">= nb-1
+        # mismatches", matching the kernel's own top-bin fold
+        hist = np.concatenate([hist[:nb - 1], [hist[nb - 1:].sum()]])
     stats.mismatch_hist[:len(hist)] += hist
     return stats

@@ -100,10 +100,14 @@ def _tap_program_kernel(n_valid_ref, cmp_cols_ref, keys_ref, key_valid_ref,
             mm = jnp.sum(miss, axis=2, dtype=jnp.int32)       # (rows, K)
             tag = ((mm == 0) & kv[None, :]).any(axis=1)
             counted = kv[None, :] & hist_flag[s] & row_ok[:, None]
-            # mm <= #compare columns, so higher bins are statically zero
+            # mm <= #compare columns, so higher bins are statically zero;
+            # when mm can exceed the bin range the top bin saturates
+            # (>= hist_bins-1 mismatches) instead of dropping mass
             for b in range(min(hist_bins, n_c + 1)):
+                in_bin = ((mm >= b) if b == hist_bins - 1 < n_c
+                          else (mm == b))
                 hist = hist.at[b].add(
-                    jnp.sum((mm == b) & counted, dtype=jnp.int32))
+                    jnp.sum(in_bin & counted, dtype=jnp.int32))
         else:
             tag = (~miss.any(axis=2) & kv[None, :]).any(axis=1)
         tag = jnp.where(kv.any(), tag, True) & row_ok

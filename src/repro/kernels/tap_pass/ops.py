@@ -84,5 +84,6 @@ def hbm_traffic_model(n_rows: int, n_cols: int, lut: LUT, width: int
         naive += n_rows * len(blk.write_cols) * 2       # write read+write
     naive *= width                                      # per digit position
     fused = 2 * bytes_array                             # one read + one write
+    # n_rows == 0 moves no bytes either way: report no reduction (1x)
     return {"naive_bytes": float(naive), "fused_bytes": float(fused),
-            "reduction_x": naive / fused}
+            "reduction_x": naive / fused if fused else 1.0}

@@ -16,10 +16,13 @@
   add/sub sweeps compiled by :func:`repro.apc.compile_mac` — multiplier-free
   compare/write cycles, the paper's in-memory arithmetic on the serving
   path.  Exact integer arithmetic (activations must be integer-valued) with
-  per-matmul cycle counts for the Table XI energy model.  Wins when the
-  question is "what would this cost on AP hardware", as a bit-exact
-  cross-check of the packed kernel, or when weights AND activations are
-  already trits and energy — not FLOPs — is the budget.
+  per-matmul cycle counts for the Table XI energy model.  ``pool=`` (an
+  :class:`repro.apc.ArrayPool`) models the real AP *bank*: bounded-column
+  arrays, K-tiled partial-sum programs, row blocks pipelined across
+  arrays — still bit-exact vs ``impl="ref"``.  Wins when the question is
+  "what would this cost on AP hardware", as a bit-exact cross-check of the
+  packed kernel, or when weights AND activations are already trits and
+  energy — not FLOPs — is the budget.
 """
 from . import ap, kernel, ops, ref
 from .ops import quantize_and_pack, ternary_matmul, ternary_matmul_op

@@ -309,3 +309,85 @@ def test_apc_ir_validation():
     compiled = apc.compile_named("add", 3, 4)
     with pytest.raises(ValueError):
         apc.execute(jnp.zeros((8, 3), jnp.int8), compiled)   # too few cols
+
+
+@pytest.mark.parametrize("rows", [0, 1, 3])
+def test_apc_execute_zero_and_tiny_rows(rows):
+    """Regression (ISSUE 3): rows == 0 must not launch a kernel (and must
+    count nothing); tiny row counts below one block must stay exact."""
+    r, w = 3, 4
+    compiled = apc.compile_named("add", r, w)
+    rng = np.random.default_rng(rows)
+    a = rng.integers(0, r ** w, rows)
+    b = rng.integers(0, r ** w, rows)
+    arr = jnp.asarray(ap.encode_operands(a, b, r, w))
+    out, traced = apc.execute(arr, compiled, collect_stats=True)
+    assert out.shape == arr.shape
+    st = apc.to_ap_stats(traced, compiled, rows, r)
+    if rows == 0:
+        assert st.sets == st.resets == 0
+        assert st.mismatch_hist.sum() == 0
+        # schedule-static cycles are still charged (the program "ran")
+        assert st.n_write_cycles == compiled.n_write_cycles
+    else:
+        lut = build_lut_nonblocked(tt.full_adder(r))
+        so = ap.APStats(radix=r)
+        out_o = np.asarray(ap.ripple_add(arr, lut, w, 2 * w, stats=so))
+        assert np.array_equal(out_o, np.asarray(out))
+        _stats_equal(so, st)
+
+
+@pytest.mark.parametrize("rows", [0, 3])
+def test_apc_execute_sharded_rows_below_shards(rows, smoke_mesh):
+    """rows < n_shards (tail shards see n_local == 0) and rows == 0: the
+    sharded path must match the oracle with no padding-row counts."""
+    r, w = 3, 4
+    compiled = apc.compile_named("add", r, w)
+    rng = np.random.default_rng(rows + 50)
+    a = rng.integers(0, r ** w, rows)
+    b = rng.integers(0, r ** w, rows)
+    arr = jnp.asarray(ap.encode_operands(a, b, r, w))
+    out_s, traced = apc.execute_sharded(arr, compiled, smoke_mesh,
+                                        collect_stats=True, block_rows=8)
+    assert out_s.shape == arr.shape
+    st = apc.to_ap_stats(traced, compiled, rows, r)
+    so = ap.APStats(radix=r)
+    lut = build_lut_nonblocked(tt.full_adder(r))
+    out_o = np.asarray(ap.ripple_add(arr, lut, w, 2 * w, stats=so))
+    assert np.array_equal(out_o, np.asarray(out_s))
+    if rows:
+        _stats_equal(so, st)
+    else:
+        assert st.sets == st.resets == 0 and st.mismatch_hist.sum() == 0
+
+
+def test_hbm_traffic_model_zero_rows_guard():
+    from repro.kernels.tap_pass.ops import hbm_traffic_model
+    lut = build_lut_nonblocked(tt.full_adder(3))
+    t = hbm_traffic_model(0, 9, lut, 4)
+    assert t["fused_bytes"] == 0.0 and t["reduction_x"] == 1.0
+    assert hbm_traffic_model(8, 9, lut, 4)["reduction_x"] > 1.0
+
+
+def test_apc_mismatch_hist_overflow_folds_into_final_bin():
+    """Regression (ISSUE 3): compares masking more cells than HIST_BINS-1
+    must fold the excess mass into the final bin on BOTH the interpreted
+    simulator and the fused kernel — identical histograms, no lost mass."""
+    r, rows = 3, 57
+    lut2 = build_lut_nonblocked(tt.REGISTRY["max"](r))
+    rng = np.random.default_rng(77)
+    arr = jnp.asarray(rng.integers(0, r, (rows, 12)), jnp.int8)
+    extra = tuple((c, 0) for c in range(2, 12))   # 12 masked cells/compare
+    so = ap.APStats(radix=r)
+    out_o = ap.apply_lut(arr, lut2, (0, 1), extra, stats=so)
+    compiled = apc.compile_program(
+        (apc.ApplyLUT(lut2, (0, 1), extra_key=extra),))
+    out_f, traced = apc.execute(arr, compiled, collect_stats=True)
+    sf = apc.to_ap_stats(traced, compiled, rows, r)
+    assert np.array_equal(np.asarray(out_o), np.asarray(out_f))
+    # parity with the interpreted simulator's totals: every compare of
+    # every row is histogrammed exactly once, nothing truncated
+    assert so.mismatch_hist.sum() == rows * lut2.n_compare_cycles
+    assert sf.mismatch_hist.sum() == rows * lut2.n_compare_cycles
+    assert np.array_equal(so.mismatch_hist, sf.mismatch_hist)
+    assert so.mismatch_hist[-1] > 0                # overflow mass landed

@@ -44,3 +44,23 @@ def test_fig6_7_trends():
     # best DR at lowest R_L / highest alpha; energies ordered by mismatches
     assert sw["dr"][0, -1] == sw["dr"].max()
     assert (np.diff(sw["energy"][0, -1]) > 0).all()
+
+
+def test_bench_ap_pool_smoke_schema():
+    """CI smoke: the ap_pool trajectory rows keep the schema the JSON
+    consumers expect, at toy sizes (one tiled + one untiled config)."""
+    from benchmarks.kernels_bench import bench_ap_pool
+    rows = bench_ap_pool(m=2, k=12, n=2, pool_rows=4,
+                         n_arrays_list=(1, 2), k_tile_list=(4,),
+                         n_timing=1)
+    assert len(rows) == 2
+    keys = {"bench", "m", "k", "n", "radix", "acc_width", "k_tile",
+            "n_tiles", "cols_budget", "pool_rows", "n_arrays", "n_blocks",
+            "us", "write_cycles", "compare_cycles", "waves",
+            "wall_write_cycles", "wall_compare_cycles"}
+    for r in rows:
+        assert keys <= set(r)
+        assert r["bench"] == "ap_pool" and r["n_tiles"] >= 2
+    # schedule totals are n_arrays-independent; pipelined waves shrink
+    assert rows[0]["write_cycles"] == rows[1]["write_cycles"]
+    assert rows[0]["waves"] >= rows[1]["waves"]

@@ -154,3 +154,21 @@ def test_encode_mac_rows_validation():
                             3, 2)
     with pytest.raises(ValueError, match="shape"):
         apc.encode_mac_rows(np.ones((2, 3), int), np.ones((2, 4), int), 3, 2)
+
+
+def test_ternary_matmul_ap_rejects_too_narrow_width():
+    """Regression (ISSUE 3): a caller-passed width too small for the
+    observed activation range must raise, not silently wrap mod r^width."""
+    rng = np.random.default_rng(9)
+    k, n = 16, 3
+    w = jnp.asarray(rng.normal(0, 0.05, (k, n)), jnp.float32)
+    packed, scale = quantize_and_pack(w)
+    x = jnp.asarray(rng.integers(-9, 10, (4, k)), jnp.float32)
+    x = x.at[0, 0].set(9.0)                       # out-of-range for width=2
+    req = apc.mac_acc_width(3, k, 9)
+    with pytest.raises(ValueError, match="mac_acc_width"):
+        ternary_matmul_ap(x, packed, scale, width=2)
+    # the minimal valid width still matches the reference bit-for-bit
+    y = ternary_matmul_ap(x, packed, scale, width=req)
+    assert np.array_equal(np.asarray(y),
+                          np.asarray(ternary_matmul_ref(x, packed, scale)))
