@@ -16,6 +16,12 @@ structural HBM-traffic/bytes arithmetic for the TPU roofline story).
    wall-clock and (pipelined) write-cycle scaling vs n_arrays and k_tile
    under a fixed column budget, the bank-level parallelism story
    ("ap_pool" trajectory in apc_bench.json).
+6. ap runtime: the program-graph scheduler — G independent tiled-MAC
+   matmuls as ONE ProgramGraph vs naive sequential pool drains, across
+   (n_devices, n_arrays): wall clock plus the occupancy model's graph
+   makespan vs sequential wall-cycle sum ("ap_runtime" trajectory).
+   n_devices > 1 rows appear when the process sees multiple devices
+   (XLA_FLAGS=--xla_force_host_platform_device_count=4).
 """
 from __future__ import annotations
 
@@ -239,6 +245,99 @@ def bench_ap_pool(m: int = 8, k: int = 96, n: int = 8, radix: int = 3,
     return results
 
 
+def bench_ap_runtime(g_programs: int = 3, m: int = 6, k: int = 48,
+                     n: int = 4, radix: int = 3, max_abs: int = 3,
+                     pool_rows: int = 8, k_tile: int = 12,
+                     n_arrays_list=(1, 2, 4), n_devices_list=(1,),
+                     n_timing: int = 2) -> list[dict]:
+    """Program-graph runtime vs naive sequential pool drains.
+
+    ``g_programs`` independent (M, K, N) ternary matmuls — each a K-tiled
+    MAC subgraph — run (a) sequentially, each drained through the pool via
+    ``run_mac_tiled`` before the next starts, and (b) as ONE ProgramGraph
+    through the Runtime.  Two scaling stories per row: wall clock of the
+    simulator, and the occupancy model's ``makespan_cycles`` vs
+    ``sequential_cycles`` (the modeled hardware win of pipelining
+    independent programs into idle arrays).  ``n_devices > 1`` builds a
+    DevicePool over a (d, 1) ("data", "model") mesh — rows appear only
+    when the process actually has that many devices.  Bit-exactness vs the
+    plain sum is asserted every run.
+    """
+    from jax.sharding import Mesh
+    from repro.core.ap import APStats
+    results = []
+    rng = np.random.default_rng(12)
+    width = apc.mac_acc_width(radix, k, max_abs)
+    cols = apc.mac_layout(min(k_tile, k), width)["n_cols"]
+    tiled = apc.compile_mac_tiled(radix, k, width, k_tile, max_cols=cols)
+    macs, want = [], []
+    for _ in range(g_programs):
+        x = rng.integers(-max_abs, max_abs + 1, (m * n, k))
+        w = rng.integers(-1, 2, (m * n, k))
+        macs.append((jnp.asarray(x, jnp.int32), jnp.asarray(w, jnp.int8)))
+        want.append((x * w).sum(axis=1))
+    for n_devices in n_devices_list:
+        if n_devices > len(jax.devices()):
+            print(f"ap_runtime: skipping n_devices={n_devices} "
+                  f"(only {len(jax.devices())} present)")
+            continue
+        mesh = None
+        if n_devices > 1:
+            devs = np.array(jax.devices()[:n_devices])
+            mesh = Mesh(devs.reshape(n_devices, 1), ("data", "model"))
+        for n_arrays in n_arrays_list:
+            if mesh is None:
+                pool = apc.ArrayPool(n_arrays=n_arrays, rows=pool_rows,
+                                     cols=cols)
+            else:
+                pool = apc.DevicePool(mesh, n_arrays=n_arrays,
+                                      rows=pool_rows, cols=cols)
+            rt = apc.Runtime(pool)
+            stats = APStats(radix=radix)
+            digs = rt.run_mac_graph([(x, w, tiled) for x, w in macs],
+                                    stats=stats)
+            for d, wnt in zip(digs, want):
+                got = apc.mac.decode_signed_digits_jnp(d, radix)
+                assert np.array_equal(np.asarray(got), wnt)
+            rep = rt.last_report
+
+            def run_graph():
+                return [jax.block_until_ready(d) for d in rt.run_mac_graph(
+                    [(x, w, tiled) for x, w in macs])]
+
+            def run_seq():
+                return [jax.block_until_ready(apc.run_mac_tiled(
+                    x, w, tiled, pool=pool)) for x, w in macs]
+
+            us_rt = _time(run_graph, n=n_timing)
+            us_seq = _time(run_seq, n=n_timing)
+            row = {"bench": "ap_runtime", "g_programs": g_programs,
+                   "m": m, "k": k, "n": n, "radix": radix,
+                   "acc_width": width, "k_tile": k_tile,
+                   "n_tiles": len(tiled.tiles), "cols_budget": cols,
+                   "pool_rows": pool_rows, "n_arrays": n_arrays,
+                   "n_devices": n_devices,
+                   "n_arrays_total": n_arrays * n_devices,
+                   "n_nodes": rep["n_nodes"],
+                   "us_runtime": round(us_rt), "us_sequential": round(us_seq),
+                   "makespan_cycles": rep["makespan_cycles"],
+                   "sequential_cycles": rep["sequential_cycles"],
+                   "makespan_ns": round(rep["makespan_ns"]),
+                   "sequential_ns": round(rep["sequential_ns"]),
+                   "pipeline_speedup_x": round(
+                       rep["sequential_cycles"]
+                       / max(1, rep["makespan_cycles"]), 2),
+                   "write_cycles": stats.n_write_cycles,
+                   "compare_cycles": stats.n_compare_cycles}
+            results.append(row)
+            print(f"ap_runtime_{g_programs}x{m}x{k}x{n}_d{n_devices}"
+                  f"_a{n_arrays},{row['us_runtime']},"
+                  f"makespan={row['makespan_cycles']}_seq="
+                  f"{row['sequential_cycles']}"
+                  f"_pipex={row['pipeline_speedup_x']}")
+    return results
+
+
 def main():
     import argparse
     p = argparse.ArgumentParser()
@@ -255,9 +354,13 @@ def main():
     apc_rows = bench_apc(rows_list=rows, json_path=args.json)
     matmul_rows = bench_ap_matmul()
     pool_rows = bench_ap_pool()
+    n_dev = len(jax.devices())
+    runtime_rows = bench_ap_runtime(
+        n_devices_list=(1,) if n_dev == 1 else (1, n_dev))
     with open(args.json, "w") as f:
         json.dump({"bench": "apc_vs_replay", "results": apc_rows,
-                   "ap_matmul": matmul_rows, "ap_pool": pool_rows}, f,
+                   "ap_matmul": matmul_rows, "ap_pool": pool_rows,
+                   "ap_runtime": runtime_rows}, f,
                   indent=2)
     print(f"apc bench JSON -> {args.json}")
 

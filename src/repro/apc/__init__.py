@@ -50,6 +50,23 @@ IR / compiler concept        Paper concept
                              row-blocks double-buffered across them, one
                              shared schedule tensor, per-launch counters
                              concatenated into the global stats.
+``graph.ProgramGraph``       A dependency DAG of compiled-program launches
+                             (K-tile partial sums feeding their ripple-add
+                             reduction; independent matmuls side by side) —
+                             the multi-array scheduling problem the AP
+                             tutorial (Fouda et al.) calls central at scale.
+``runtime.DevicePool``       The bank spanned over a device mesh via
+                             shard_map: n_arrays x n_devices physical
+                             arrays, per-device schedule replay, APStats
+                             psummed in-graph.
+``runtime.Runtime``          Topological-wavefront executor + occupancy
+                             model: independent programs pipeline into idle
+                             arrays, ``graph_makespan`` extends
+                             ``wall_cycles`` to whole graphs.
+``layers.APLinear``          A model projection as a cached K-tiled MAC;
+                             ``APServeContext`` aggregates per-request
+                             APStats / Table XI energy across every AP-
+                             served projection of a forward pass.
 ==========================  =================================================
 
 Typical use::
@@ -62,8 +79,14 @@ Typical use::
 or via the drivers: ``repro.core.ap.ripple_add(..., engine="apc")``.
 """
 from . import exec as exec  # noqa: PLC0414 — re-export the module
-from . import ir, lower, mac, pool as pool_mod, stats
+from . import (graph as graph_mod, ir, layers as layers_mod, lower, mac,
+               pool as pool_mod, runtime as runtime_mod, stats)
 from .exec import execute, execute_sharded, run
+from .graph import (CARRIED, FoldStage, GraphNode, ProgramGraph,
+                    fold_stage_input, graph_makespan, mac_fold_plan)
+from .layers import (APLinear, APServeContext, ap_moe_dispatch, ap_serving,
+                     current_ap_context)
+from .runtime import DevicePool, GraphResult, Runtime
 from .ir import (AffineCol, ApplyLUT, CompareWrite, ForDigit, Program,
                  RelCol, SetCol, ZeroCol, digit)
 from .lower import (CompiledProgram, Step, compile_named, compile_program,
@@ -74,13 +97,19 @@ from .mac import (TiledMac, compile_mac, compile_mac_reduce,
                   compile_mac_tiled, decode_mac_acc, decode_mac_acc_jnp,
                   decode_signed_digits_jnp, encode_mac_rows,
                   encode_mac_rows_jnp, mac_acc_width, mac_layout,
-                  mac_program, mac_reduce_program)
+                  mac_program, mac_reduce_program, matmul_mac_rows)
 from .pool import ArrayPool, run_mac_tiled, run_pooled
 from .stats import TracedStats, accumulate, to_ap_stats
 
 __all__ = [
-    "exec", "ir", "lower", "mac", "pool_mod", "stats",
+    "exec", "graph_mod", "ir", "layers_mod", "lower", "mac", "pool_mod",
+    "runtime_mod", "stats",
     "execute", "execute_sharded", "run",
+    "CARRIED", "FoldStage", "GraphNode", "ProgramGraph", "fold_stage_input",
+    "graph_makespan", "mac_fold_plan",
+    "APLinear", "APServeContext", "ap_moe_dispatch", "ap_serving",
+    "current_ap_context",
+    "DevicePool", "GraphResult", "Runtime",
     "AffineCol", "ApplyLUT", "CompareWrite", "ForDigit", "Program", "RelCol",
     "SetCol", "ZeroCol", "digit",
     "CompiledProgram", "Step", "compile_named", "compile_program",
@@ -89,7 +118,7 @@ __all__ = [
     "TiledMac", "compile_mac", "compile_mac_reduce", "compile_mac_tiled",
     "decode_mac_acc", "decode_mac_acc_jnp", "decode_signed_digits_jnp",
     "encode_mac_rows", "encode_mac_rows_jnp", "mac_acc_width", "mac_layout",
-    "mac_program", "mac_reduce_program",
+    "mac_program", "mac_reduce_program", "matmul_mac_rows",
     "ArrayPool", "run_mac_tiled", "run_pooled",
     "TracedStats", "accumulate", "to_ap_stats",
 ]

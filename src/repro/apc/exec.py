@@ -12,7 +12,10 @@ holds the array; :func:`execute_sharded` shard_maps row-blocks over the
 ("pod", "data") axes of a :mod:`repro.launch.mesh` device mesh, psumming the
 traced counters so every shard returns the global stats; :func:`run` with
 ``pool=`` streams row blocks over a bank of bounded MvCAM arrays
-(:mod:`repro.apc.pool`) instead of assuming one unbounded array.
+(:mod:`repro.apc.pool`) instead of assuming one unbounded array — a
+:class:`repro.apc.runtime.DevicePool` there spans the bank over mesh
+devices, and whole dependency DAGs of programs schedule through
+:class:`repro.apc.runtime.Runtime` rather than this single-program door.
 """
 from __future__ import annotations
 
@@ -64,6 +67,44 @@ def execute(arr: jax.Array, compiled: CompiledProgram, *,
     return out, (TracedStats(block_counts=raw) if collect_stats else None)
 
 
+def sharded_program_run(padded: jax.Array, sched: tuple, mesh, axes,
+                        rows: int, block_rows: int, *,
+                        collect_stats: bool, interpret: bool
+                        ) -> tuple[jax.Array, jax.Array]:
+    """shard_map scaffolding shared by :func:`execute_sharded` and
+    :class:`repro.apc.runtime.DevicePool`: split ``padded`` (rows already a
+    multiple of shards x block_rows) over ``axes``, run the packed
+    ``sched`` tensors per shard with padding rows masked via each shard's
+    global row offset, and psum the raw counter tensor across shards so
+    every shard returns the GLOBAL counts.  Returns ``(out, raw)`` with
+    ``out`` still padded (caller slices) and ``raw`` meaningful only when
+    ``collect_stats``."""
+    n_shards = math.prod(mesh.shape[a] for a in axes)
+    shard_rows = padded.shape[0] // n_shards
+
+    def per_shard(a):
+        # global row index of this shard's first row -> how many of its rows
+        # are real (the tail shard sees the padding)
+        idx = jnp.int32(0)
+        for ax in axes:
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        n_local = jnp.clip(rows - idx * shard_rows, 0, shard_rows)
+        out, raw = tap_run_program(
+            a, *sched, n_local, block_rows=block_rows,
+            collect_stats=collect_stats, hist_bins=HIST_BINS,
+            interpret=interpret)
+        if collect_stats:
+            # elementwise-add the (n_blocks, counters) tensors across shards;
+            # the int64 total reduction stays on the host (stats.accumulate)
+            return out, jax.lax.psum(raw, axes)
+        return out, jnp.zeros((), jnp.int32)
+
+    spec_in = P(axes if len(axes) > 1 else axes[0])
+    f = shard_map(per_shard, mesh=mesh, in_specs=(spec_in,),
+                  out_specs=(spec_in, P()))
+    return f(padded)
+
+
 def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
                     collect_stats: bool = False,
                     block_rows: int | None = None, interpret: bool = True
@@ -80,34 +121,14 @@ def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
     block_rows = block_rows or min(BLOCK_ROWS,
                                    max(8, -(-rows // n_shards)))
     padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), n_shards * block_rows)
-    shard_rows = padded.shape[0] // n_shards
-
-    def per_shard(a):
-        # global row index of this shard's first row -> how many of its rows
-        # are real (the tail shard sees the padding)
-        idx = jnp.int32(0)
-        for ax in axes:
-            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
-        n_local = jnp.clip(rows - idx * shard_rows, 0, shard_rows)
-        out, raw = tap_run_program(
-            a, compiled.cmp_cols, compiled.keys, compiled.key_valid,
-            compiled.hist_flag, compiled.wr_cols, compiled.wr_vals,
-            n_local, block_rows=block_rows,
-            collect_stats=collect_stats, hist_bins=HIST_BINS,
-            interpret=interpret)
-        if collect_stats:
-            # elementwise-add the (n_blocks, counters) tensors across shards;
-            # the int64 total reduction stays on the host (stats.accumulate)
-            return out, TracedStats(jax.lax.psum(raw, axes))
-        return out, jnp.zeros((), jnp.int32)
-
-    spec_in = P(axes if len(axes) > 1 else axes[0])
-    f = shard_map(per_shard, mesh=mesh, in_specs=(spec_in,),
-                  out_specs=(spec_in, P()))
-    out, traced = f(padded)
+    sched = (compiled.cmp_cols, compiled.keys, compiled.key_valid,
+             compiled.hist_flag, compiled.wr_cols, compiled.wr_vals)
+    out, raw = sharded_program_run(padded, sched, mesh, axes, rows,
+                                   block_rows, collect_stats=collect_stats,
+                                   interpret=interpret)
     out = out[:rows]
     if collect_stats:
-        return out, traced
+        return out, TracedStats(raw)
     return out, None
 
 

@@ -1,0 +1,284 @@
+"""Program graphs: dependency DAGs of compiled-program launches.
+
+The AP's systems problem at scale is not single-array latency — it is
+*occupancy*: many independent arithmetic programs resident in the CAM bank
+at once, tiles of different matmuls interleaved into idle arrays while a
+reduction waits on its partials (the multi-array scheduling framing of the
+Fouda et al. AP tutorial, and the bank-occupancy argument of Yavits-style
+3D AP work).  This module gives that structure a first-class object:
+
+- :class:`GraphNode` — one :class:`~repro.apc.lower.CompiledProgram` launch
+  over ``rows`` CAM rows.  ``build(*dep_results)`` packs the node's input
+  digit array from its dependencies' results (pure jnp, so execution order
+  of independent nodes can never change the digits), ``result_cols`` is the
+  column slice carried forward as this node's result.
+- :class:`ProgramGraph` — append-only DAG (``deps`` must reference earlier
+  nodes, so it is acyclic by construction) with topological wavefronts.
+- :func:`graph_makespan` — the per-array occupancy model extending
+  :meth:`~repro.apc.pool.ArrayPool.wall_cycles` from one launch to a whole
+  graph: list-schedule every node's row-blocks onto the earliest-free array
+  of the ``n_arrays x n_devices`` bank, never starting a node before its
+  dependencies finish.  ``sequential_cycles`` is the naive baseline (drain
+  each launch completely before the next); the scheduler's makespan is
+  <= that sum by construction and strictly below it whenever independent
+  programs leave arrays idle mid-drain.
+- :func:`mac_fold_plan` / :func:`add_mac_tiled` — the K-tiled MAC
+  (:class:`~repro.apc.mac.TiledMac`) as a graph: tile partial-sum programs
+  are the roots, each ripple-add reduction stage depends on the partials it
+  folds.  The fold plan is THE shared description of the reduction chain —
+  :func:`repro.apc.pool.run_mac_tiled` replays the same plan sequentially,
+  so cycle accounting lives here, in one place.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.energy import T_EVALUATE_NS, T_PRECHARGE_NS, T_WRITE_NS
+from .lower import CompiledProgram
+from .mac import TiledMac, encode_mac_rows_jnp, mac_layout
+
+T_COMPARE_NS = T_PRECHARGE_NS + T_EVALUATE_NS
+
+CARRIED = -1          # fold-plan sentinel: previous stage's folded result
+
+
+class FoldStage(NamedTuple):
+    """One ripple-add reduction stage of a K-tiled MAC fold.
+
+    ``parts`` are indices into the tile-partial list (:data:`CARRIED` means
+    the previous stage's result rides along as the first operand);
+    ``out_lo:out_hi`` is the digit-column slice of the stage's output row
+    holding the folded sum.
+    """
+    prog: CompiledProgram
+    parts: tuple[int, ...]
+    out_lo: int
+    out_hi: int
+
+
+def mac_fold_plan(tiled: TiledMac) -> tuple[FoldStage, ...]:
+    """The reduction chain of a :class:`TiledMac` as explicit fold stages.
+
+    Single source of truth for which partials feed which reduction program
+    (and hence for tiled cycle accounting): ``run_mac_tiled`` replays these
+    stages sequentially, :func:`add_mac_tiled` turns them into graph nodes.
+    """
+    stages: list[FoldStage] = []
+    width = tiled.width
+    nxt = 0
+    for j, (g, prog) in enumerate(zip(tiled.reduce_groups,
+                                      tiled.reduce_programs)):
+        fresh = g if j == 0 else g - 1       # later stages carry one partial
+        parts = tuple(range(nxt, nxt + fresh))
+        if j:
+            parts = (CARRIED,) + parts
+        nxt += fresh
+        stages.append(FoldStage(prog, parts, (g - 1) * width, g * width))
+    return tuple(stages)
+
+
+def fold_stage_input(group: list[jax.Array]) -> jax.Array:
+    """Pack a reduction stage's row: partial digit blocks side by side plus
+    the zeroed carry column."""
+    rows = group[0].shape[0]
+    return jnp.concatenate(
+        [jnp.asarray(g, jnp.int8) for g in group]
+        + [jnp.zeros((rows, 1), jnp.int8)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# The graph
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GraphNode:
+    """One compiled-program launch over ``rows`` CAM rows."""
+    compiled: CompiledProgram
+    rows: int
+    build: Callable[..., jax.Array]          # (*dep_results) -> [rows, cols]
+    deps: tuple[int, ...] = ()
+    result_cols: tuple[int, int] | None = None
+    label: str = ""
+
+    @property
+    def cycles(self) -> int:
+        """One replay of this node's program, in compare + write cycles —
+        the scalar duration the occupancy model schedules with."""
+        return self.compiled.n_compare_cycles + self.compiled.n_write_cycles
+
+    @property
+    def cycles_ns(self) -> float:
+        return (self.compiled.n_compare_cycles * T_COMPARE_NS
+                + self.compiled.n_write_cycles * T_WRITE_NS)
+
+    def result(self, out: jax.Array) -> jax.Array:
+        if self.result_cols is None:
+            return out
+        lo, hi = self.result_cols
+        return out[:, lo:hi]
+
+
+@dataclass
+class ProgramGraph:
+    """Append-only DAG of program launches (acyclic by construction: a
+    node's ``deps`` may only reference already-added nodes)."""
+    nodes: list[GraphNode] = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def add(self, compiled: CompiledProgram, *, rows: int,
+            build: Callable[..., jax.Array], deps: tuple[int, ...] = (),
+            result_cols: tuple[int, int] | None = None,
+            label: str = "") -> int:
+        if rows < 0:
+            raise ValueError(f"rows must be >= 0, got {rows}")
+        nid = len(self.nodes)
+        for d in deps:
+            if not 0 <= d < nid:
+                raise ValueError(
+                    f"node {nid} depends on {d}, which is not an "
+                    f"already-added node (graphs are built in topological "
+                    f"order)")
+        self.nodes.append(GraphNode(compiled, rows, build, tuple(deps),
+                                    result_cols, label))
+        return nid
+
+    def wavefronts(self) -> list[list[int]]:
+        """Topological levels: wavefront k holds every node whose longest
+        dependency chain has k predecessors — the ready sets a hardware
+        sequencer would issue together."""
+        level: list[int] = []
+        for n in self.nodes:
+            level.append(1 + max((level[d] for d in n.deps), default=-1))
+        waves: list[list[int]] = [[] for _ in range(max(level, default=-1)
+                                                    + 1)]
+        for nid, lv in enumerate(level):
+            waves[lv].append(nid)
+        return waves
+
+    def sinks(self) -> list[int]:
+        """Nodes no other node consumes (the graph's outputs)."""
+        consumed = {d for n in self.nodes for d in n.deps}
+        return [i for i in range(len(self.nodes)) if i not in consumed]
+
+    def total_cycles(self) -> dict[str, int]:
+        """Schedule-static totals charged to the energy model (one replay
+        per program, row-parallel; independent of pool geometry)."""
+        return {
+            "compare_cycles": sum(n.compiled.n_compare_cycles
+                                  for n in self.nodes),
+            "write_cycles": sum(n.compiled.n_write_cycles
+                                for n in self.nodes),
+        }
+
+    # -- K-tiled MAC as a subgraph ------------------------------------------
+
+    def add_mac_tiled(self, x: jax.Array, w_ter: jax.Array, tiled: TiledMac,
+                      label: str = "") -> int:
+        """Add one K-tiled ternary MAC (``ACC = sum_k w_k * x_k`` over
+        ``x``/``w_ter`` [R, K]) as tile nodes + fold-stage nodes; returns
+        the node id whose result is the [R, width] accumulator digit block.
+
+        All tile nodes are mutually independent — across two added MACs the
+        scheduler interleaves their tiles freely, which is exactly the
+        program-level pipelining the runtime exists for.
+        """
+        R, K = x.shape
+        if K != tiled.K:
+            raise ValueError(f"x has K={K}, tiled program compiled for "
+                             f"K={tiled.K}")
+        radix, width = tiled.radix, tiled.width
+        tile_ids: list[int] = []
+        for t, ((lo, hi), prog) in enumerate(zip(tiled.tiles,
+                                                 tiled.programs)):
+            base = mac_layout(hi - lo, width)["acc_base"]
+
+            def build_tile(*, _lo=lo, _hi=hi):
+                return encode_mac_rows_jnp(x[:, _lo:_hi], w_ter[:, _lo:_hi],
+                                           radix, width)
+
+            tile_ids.append(self.add(
+                prog, rows=R, build=build_tile,
+                result_cols=(base, base + width),
+                label=f"{label}tile{t}[{lo}:{hi}]"))
+        last = tile_ids[0]
+        for j, stage in enumerate(mac_fold_plan(tiled)):
+            deps = tuple(last if p == CARRIED else tile_ids[p]
+                         for p in stage.parts)
+            last = self.add(
+                stage.prog, rows=R,
+                build=lambda *parts: fold_stage_input(list(parts)),
+                deps=deps, result_cols=(stage.out_lo, stage.out_hi),
+                label=f"{label}reduce{j}")
+        return last
+
+
+# ---------------------------------------------------------------------------
+# Occupancy model: wall_cycles generalized to graph makespan
+# ---------------------------------------------------------------------------
+
+def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
+                   rows_per_array: int, n_devices: int = 1
+                   ) -> dict[str, float]:
+    """List-schedule the graph onto ``n_arrays * n_devices`` arrays.
+
+    Each node expands into ``ceil(rows / rows_per_array)`` block-tasks of
+    duration ``node.cycles`` (one program replay per resident block); a
+    node becomes ready when all dependencies finish, and its blocks are
+    dealt round-robin over the arrays sorted by earliest free time (the
+    earliest-free arrays take the remainder blocks).  The returned
+    ``makespan_cycles`` is the pipelined wall clock of the whole graph;
+    ``sequential_cycles`` is the naive drain-each-launch-in-turn baseline
+    (``sum(ceil(ceil(blocks/devices)/arrays) * cycles)``, the cost the
+    PR-3 pool charges when programs run back to back).  Since no array
+    receives more than ``ceil(blocks / total)`` blocks of one node,
+    every free time grows by at most one sequential-wave term per node —
+    ``makespan <= sequential`` by construction, and strictly below it
+    whenever a drain would leave arrays idle (independent programs in
+    flight, or a tail wave that does not fill the bank).
+    """
+    if n_arrays < 1 or n_devices < 1 or rows_per_array < 1:
+        raise ValueError(
+            f"pool geometry must be positive, got n_arrays={n_arrays}, "
+            f"n_devices={n_devices}, rows={rows_per_array}")
+    total = n_arrays * n_devices
+    free = [0] * total
+    free_ns = [0.0] * total
+    finish: list[int] = []
+    finish_ns: list[float] = []
+    seq = 0
+    seq_ns = 0.0
+    for node in graph.nodes:
+        ready = max((finish[d] for d in node.deps), default=0)
+        ready_ns = max((finish_ns[d] for d in node.deps), default=0.0)
+        blocks = max(1, math.ceil(node.rows / rows_per_array))
+        end, end_ns = ready, ready_ns
+        order = sorted(range(total), key=free.__getitem__)
+        for j, i in enumerate(order):
+            nb = blocks // total + (1 if j < blocks % total else 0)
+            if nb == 0:
+                break
+            free[i] = max(free[i], ready) + nb * node.cycles
+            end = max(end, free[i])
+            # ns rides the SAME block assignment (Table-XI-timed rendering
+            # of the cycle schedule), so makespan_ns <= sequential_ns by
+            # the identical per-node wave bound
+            free_ns[i] = max(free_ns[i], ready_ns) + nb * node.cycles_ns
+            end_ns = max(end_ns, free_ns[i])
+        finish.append(end)
+        finish_ns.append(end_ns)
+        waves = math.ceil(math.ceil(blocks / n_devices) / n_arrays)
+        seq += waves * node.cycles
+        seq_ns += waves * node.cycles_ns
+    return {"makespan_cycles": max(finish, default=0),
+            "sequential_cycles": seq,
+            "makespan_ns": max(finish_ns, default=0.0),
+            "sequential_ns": seq_ns,
+            "n_arrays_total": total,
+            "n_nodes": len(graph.nodes)}

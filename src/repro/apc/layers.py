@@ -1,0 +1,338 @@
+"""AP-backed model layers: ternary projections through the graph runtime.
+
+The serving story of the paper's AP: every ternary projection of a model
+(`models/mlp.py` SwiGLU, `models/moe.py` experts) is a ternary matmul, every
+ternary matmul is a K-tiled MAC program, and *independent* projections — the
+gate and up projections of one MLP, the experts of one MoE layer — are
+independent subgraphs of ONE :class:`~repro.apc.graph.ProgramGraph`, so the
+runtime interleaves their tile programs across the array bank instead of
+draining them one by one.
+
+- :class:`APLinear` — one projection ``y = (x @ w_ter) * w_scale`` with a
+  per-(radix, K, width, k_tile) compiled-program cache
+  (:func:`~repro.apc.mac.compile_mac_tiled` is lru-cached; every request
+  replays the same TiledMac).
+- :class:`APServeContext` — per-request aggregation: one
+  :class:`~repro.core.ap.APStats` across every AP-served projection, graph
+  makespan/sequential totals from the occupancy model, and a Table XI
+  energy report.  Activations quantize to a signed integer grid
+  (``x_levels``) per call — the AP computes exact integer dot products on
+  the quantized activations; fidelity is the quantization's, exactness the
+  AP's.
+- :func:`ap_moe_dispatch` — sort tokens to experts and run every expert's
+  projections as independent nodes of one graph (the multi-array occupancy
+  workload of the AP-tutorial framing).
+- :func:`ap_serving` — context manager the serve engine uses to flip
+  ``models.mlp.mlp`` / ``models.moe.moe_ffn`` onto the AP path without
+  threading a runtime handle through the whole model stack.
+"""
+from __future__ import annotations
+
+import contextvars
+from contextlib import contextmanager
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ap import APStats
+from ..core.energy import energy_from_stats
+from ..kernels.ternary_matmul.ref import quantize_ternary, unpack_ternary
+from .graph import ProgramGraph
+from .mac import (compile_mac_tiled, decode_signed_digits_jnp,
+                  mac_acc_width, matmul_mac_rows)
+from .runtime import Runtime
+
+__all__ = ["APLinear", "APServeContext", "ap_moe_dispatch", "ap_serving",
+           "current_ap_context", "N_MASKED_MAC"]
+
+# compare-key mask width of the MAC sweeps: 3 LUT columns + 1 weight
+# predicate column (what the Table XI matchline model charges per compare)
+N_MASKED_MAC = 4
+
+
+class APCall(NamedTuple):
+    """Handle to one projection added to a graph: decode after the run."""
+    node: int
+    radix: int
+    t: int
+    n: int
+    w_scale: jax.Array
+
+    def decode(self, results, x_scale) -> jax.Array:
+        acc = decode_signed_digits_jnp(results[self.node], self.radix)
+        y = acc.reshape(self.t, self.n).astype(jnp.float32)
+        return y * jnp.asarray(x_scale, jnp.float32) \
+            * self.w_scale[None, :]
+
+
+class APLinear:
+    """One ternary projection served by the AP runtime.
+
+    ``w_ter`` [K, N] in {-1, 0, +1}, ``w_scale`` [N] float (absmean
+    per-channel scale, as produced by :func:`quantize_ternary`).
+    """
+
+    def __init__(self, w_ter: jax.Array, w_scale: jax.Array, *,
+                 radix: int = 3, label: str = ""):
+        self.w_ter = jnp.asarray(w_ter, jnp.int8)
+        self.w_scale = jnp.asarray(w_scale, jnp.float32)
+        self.kp, self.n = self.w_ter.shape
+        self.radix = radix
+        self.label = label
+
+    @classmethod
+    def from_packed(cls, packed: jax.Array, scale: jax.Array,
+                    **kw) -> "APLinear":
+        """From the 16-per-int32 packed serving weights."""
+        return cls(unpack_ternary(packed, dtype=jnp.int8), scale, **kw)
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, **kw) -> "APLinear":
+        """Quantize a dense float matrix to balanced ternary + scale."""
+        w_ter, scale = quantize_ternary(jnp.asarray(w, jnp.float32))
+        return cls(w_ter, scale, **kw)
+
+    def __repr__(self) -> str:
+        return (f"APLinear({self.kp}x{self.n}, radix={self.radix}"
+                f"{', ' + self.label if self.label else ''})")
+
+    def add_call(self, graph: ProgramGraph, x_int: jax.Array, *,
+                 max_cols: int, max_q: int, k_tile: int | None = None
+                 ) -> APCall:
+        """Add this projection on ``x_int`` [T, K] (|x| <= max_q) to the
+        graph as a K-tiled MAC over all T*N output rows; returns the
+        decode handle."""
+        from ..kernels.ternary_matmul.ap import default_k_tile
+        t, k = x_int.shape
+        if k > self.kp:
+            raise ValueError(f"x has K={k}, projection K'={self.kp}")
+        if k < self.kp:                   # pack-time padding rows: w == 0
+            x_int = jnp.pad(x_int, ((0, 0), (0, self.kp - k)))
+        width = mac_acc_width(self.radix, self.kp, max_q)
+        kt = k_tile if k_tile is not None else default_k_tile(max_cols,
+                                                              width)
+        tiled = compile_mac_tiled(self.radix, self.kp, width,
+                                  min(kt, self.kp), max_cols=max_cols)
+        x_rows, w_rows = matmul_mac_rows(x_int, self.w_ter)   # [T*N, K']
+        node = graph.add_mac_tiled(x_rows, w_rows, tiled,
+                                   label=f"{self.label}:" if self.label
+                                   else "")
+        return APCall(node, self.radix, t, self.n, self.w_scale)
+
+    def __call__(self, x: jax.Array, ctx: "APServeContext") -> jax.Array:
+        """Standalone projection: quantize, one-node graph, run, decode."""
+        graph = ProgramGraph()
+        x_int, s = ctx.quantize(x)
+        call = self.add_call(graph, x_int, max_cols=ctx.max_cols,
+                             max_q=ctx.x_levels)
+        res = ctx.run_graph(graph)
+        return call.decode(res, s).astype(x.dtype)
+
+
+class APServeContext:
+    """Per-request AP serving state: runtime + aggregated stats/energy.
+
+    ``x_levels`` is the activation quantization grid (|x_int| <= x_levels,
+    e.g. 7 = a signed 4-level-per-sign 3-bit grid); the AP arithmetic on
+    the quantized integers is exact, so output fidelity is set entirely by
+    this knob.  ``reset()`` starts a fresh request; ``report()`` renders
+    the aggregate as write/compare cycles, Table XI energy, and the
+    occupancy model's makespan vs naive sequential drains.
+    """
+
+    def __init__(self, runtime: Runtime, *, radix: int = 3,
+                 x_levels: int = 7, max_cols: int | None = None):
+        self.runtime = runtime
+        self.radix = radix
+        self.x_levels = int(x_levels)
+        self.max_cols = max_cols if max_cols is not None \
+            else runtime.pool.cols
+        # weight -> APLinear cache, id()-keyed with the source array pinned
+        # in the value; FIFO-capped like ArrayPool._schedules so a caller
+        # feeding fresh arrays per request cannot grow it without bound
+        self._linears: dict = {}
+        self._max_linears = 64
+        self.reset()
+
+    def reset(self) -> None:
+        self.stats = APStats(radix=self.radix)
+        self.makespan_cycles = 0
+        self.sequential_cycles = 0
+        self.makespan_ns = 0.0
+        self.sequential_ns = 0.0
+        self.n_graphs = 0
+        self.n_programs = 0
+
+    # -- projection cache ---------------------------------------------------
+
+    def linear(self, key, packed: jax.Array, scale: jax.Array,
+               label: str = "") -> APLinear:
+        """Cached APLinear for packed weights (one unpack per weight)."""
+        ck = (key, id(packed))
+        hit = self._linears.get(ck)
+        if hit is None:
+            hit = (packed, APLinear.from_packed(packed, scale,
+                                                radix=self.radix,
+                                                label=label))
+            self._cache_put(ck, hit)       # pin packed so id() stays valid
+        return hit[1]
+
+    def expert_linears(self, key, w_stack: jax.Array,
+                       label: str = "") -> list[APLinear]:
+        """Cached per-expert APLinears from stacked dense [E, K, N]."""
+        ck = (key, id(w_stack))
+        hit = self._linears.get(ck)
+        if hit is None:
+            lins = [APLinear.from_dense(w_stack[e], radix=self.radix,
+                                        label=f"{label}e{e}")
+                    for e in range(w_stack.shape[0])]
+            hit = (w_stack, lins)
+            self._cache_put(ck, hit)
+        return hit[1]
+
+    def _cache_put(self, ck, value) -> None:
+        while len(self._linears) >= self._max_linears:    # FIFO evict
+            self._linears.pop(next(iter(self._linears)))
+        self._linears[ck] = value
+
+    # -- quantization -------------------------------------------------------
+
+    def quantize(self, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """x float [T, K] -> (x_int int32 with |x| <= x_levels, scale)."""
+        xf = jnp.asarray(x, jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(xf)) / self.x_levels, 1e-8)
+        xi = jnp.clip(jnp.round(xf / s), -self.x_levels,
+                      self.x_levels).astype(jnp.int32)
+        return xi, s
+
+    # -- execution + aggregation --------------------------------------------
+
+    def run_graph(self, graph: ProgramGraph):
+        res = self.runtime.run_graph(graph, stats=self.stats)
+        self.makespan_cycles += res.report["makespan_cycles"]
+        self.sequential_cycles += res.report["sequential_cycles"]
+        self.makespan_ns += res.report["makespan_ns"]
+        self.sequential_ns += res.report["sequential_ns"]
+        self.n_graphs += 1
+        self.n_programs += res.report["n_nodes"]
+        return res
+
+    def report(self, n_masked: int = N_MASKED_MAC) -> dict:
+        """Aggregated per-request accounting: functional-simulator counters
+        + Table XI energy + graph-scheduler occupancy."""
+        rep = energy_from_stats(self.stats, n_masked=n_masked)
+        return {
+            "write_cycles": self.stats.n_write_cycles,
+            "compare_cycles": self.stats.n_compare_cycles,
+            "sets": int(self.stats.sets),
+            "resets": int(self.stats.resets),
+            "energy_write_j": rep.write_energy_j,
+            "energy_compare_j": rep.compare_energy_j,
+            "energy_total_j": rep.total_j,
+            "makespan_cycles": self.makespan_cycles,
+            "sequential_cycles": self.sequential_cycles,
+            "makespan_ns": self.makespan_ns,
+            "sequential_ns": self.sequential_ns,
+            "n_graphs": self.n_graphs,
+            "n_programs": self.n_programs,
+            "n_arrays_total": getattr(self.runtime.pool, "total_arrays",
+                                      self.runtime.pool.n_arrays),
+        }
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch: every expert an independent subgraph of one ProgramGraph
+# ---------------------------------------------------------------------------
+
+def ap_moe_dispatch(ctx: APServeContext, x2d: jax.Array,
+                    expert_ids: jax.Array, gates: jax.Array,
+                    w1_lins: list[APLinear], w3_lins: list[APLinear],
+                    w2_lins: list[APLinear],
+                    act: Callable[[jax.Array], jax.Array]) -> jax.Array:
+    """SwiGLU MoE FFN with every expert projection AP-served.
+
+    ``x2d`` [T, d] float, ``expert_ids``/``gates`` [T, k] (router top-k).
+    Token rows sort to their experts on the host (the AP path is the
+    functional simulator — exactness over dispatch latency), then TWO
+    graphs run: one with all experts' gate+up projections (2E independent
+    tiled-MAC subgraphs, interleaved across the bank), one with the down
+    projections after the float combine.  Returns [T, d_out].
+    """
+    t, k = expert_ids.shape
+    n_out = w2_lins[0].n
+    eids = np.asarray(expert_ids).reshape(-1)              # host dispatch
+    flat_gates = gates.reshape(-1)
+    groups = []                                            # (e, pair_idx)
+    for e in range(len(w1_lins)):
+        pair_idx = np.nonzero(eids == e)[0]
+        if pair_idx.size:
+            groups.append((e, pair_idx))
+
+    x_int, s_x = ctx.quantize(x2d)
+    g1 = ProgramGraph()
+    calls = []
+    for e, pair_idx in groups:
+        tok = jnp.asarray(pair_idx // k, jnp.int32)
+        sub = x_int[tok]
+        c1 = w1_lins[e].add_call(g1, sub, max_cols=ctx.max_cols,
+                                 max_q=ctx.x_levels)
+        c3 = w3_lins[e].add_call(g1, sub, max_cols=ctx.max_cols,
+                                 max_q=ctx.x_levels)
+        calls.append((e, pair_idx, tok, c1, c3))
+    res1 = ctx.run_graph(g1)
+
+    g2 = ProgramGraph()
+    down = []
+    for e, pair_idx, tok, c1, c3 in calls:
+        h = act(c1.decode(res1, s_x)) * c3.decode(res1, s_x)
+        h_int, s_h = ctx.quantize(h)
+        c2 = w2_lins[e].add_call(g2, h_int, max_cols=ctx.max_cols,
+                                 max_q=ctx.x_levels)
+        down.append((pair_idx, s_h, c2))
+    res2 = ctx.run_graph(g2)
+
+    y2d = jnp.zeros((t, n_out), jnp.float32)
+    for pair_idx, s_h, c2 in down:
+        y_e = c2.decode(res2, s_h)
+        gsel = flat_gates[jnp.asarray(pair_idx, jnp.int32)]
+        tok = jnp.asarray(pair_idx // k, jnp.int32)
+        y2d = y2d.at[tok].add(y_e * gsel[:, None].astype(jnp.float32))
+    return y2d
+
+
+# ---------------------------------------------------------------------------
+# Serving hook: flip models' ternary projections onto the AP path
+# ---------------------------------------------------------------------------
+
+_AP_CTX: contextvars.ContextVar[APServeContext | None] = \
+    contextvars.ContextVar("ap_serve_ctx", default=None)
+
+
+def current_ap_context() -> APServeContext | None:
+    """The active AP serving context, if any — None in ordinary float
+    serving AND while jax is tracing (contextvars are visible during
+    tracing, but the AP path is host-orchestrated and cannot live under
+    jit, so a jitted step inside ``ap_serving`` falls back to the float
+    path instead of exploding on a tracer host-sync)."""
+    ctx = _AP_CTX.get()
+    if ctx is None:
+        return None
+    clean = getattr(jax.core, "trace_state_clean", None)
+    if clean is not None and not clean():
+        return None
+    return ctx
+
+
+@contextmanager
+def ap_serving(ctx: APServeContext):
+    """While active, ``models.mlp.mlp`` (packed params) and
+    ``models.moe.moe_ffn`` route their projections through ``ctx`` — the
+    model code needs no plumbing, and the serve engine simply wraps its
+    (unjitted) step."""
+    token = _AP_CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _AP_CTX.reset(token)

@@ -235,6 +235,20 @@ def decode_mac_acc_jnp(arr: jax.Array, radix: int, K: int,
     return decode_signed_digits_jnp(arr[:, base:base + width], radix)
 
 
+def matmul_mac_rows(x_int: jax.Array, w_ter: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """THE row layout of an AP matmul, in one place: CAM row ``t*N + n``
+    holds activation vector ``x_int[t, :]`` and weight column
+    ``w_ter[:, n]`` — all T*N dot products row-parallel.  ``x_int`` [T, K],
+    ``w_ter`` [K, N]; returns ``(x_rows, w_rows)`` both [T*N, K].  The
+    matching decode is ``acc.reshape(T, N)``."""
+    t, k = x_int.shape
+    if w_ter.shape[0] != k:
+        raise ValueError(f"x has K={k}, w_ter has K={w_ter.shape[0]}")
+    return (jnp.repeat(x_int, w_ter.shape[1], axis=0),
+            jnp.tile(w_ter.T, (t, 1)))
+
+
 # ---------------------------------------------------------------------------
 # K-tiling: per-tile partial-sum programs + ripple-add reduction
 # ---------------------------------------------------------------------------
@@ -331,6 +345,7 @@ def _reduce_plan(n_parts: int, width: int, max_cols: int | None
     return tuple(groups)
 
 
+@functools.lru_cache(maxsize=128)
 def compile_mac_tiled(radix: int, K: int, width: int, k_tile: int, *,
                       blocked: bool = False, max_cols: int | None = None
                       ) -> TiledMac:
@@ -339,6 +354,10 @@ def compile_mac_tiled(radix: int, K: int, width: int, k_tile: int, *,
     row too).  Bit-exact vs :func:`compile_mac` at the same width — the
     partials and their sum all wrap mod ``r^width`` (radix complement), so
     tiling never changes the final residue digits.
+
+    Cached per (radix, K, width, k_tile, blocked, max_cols) — the serving
+    layers (:mod:`repro.apc.layers`) hit this once per projection shape and
+    replay the same TiledMac for every request.
     """
     if k_tile < 1:
         raise ValueError(f"k_tile must be >= 1, got {k_tile}")

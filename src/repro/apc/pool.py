@@ -74,6 +74,33 @@ class ArrayPool:
         return (f"ArrayPool(n_arrays={self.n_arrays}, rows={self.rows}, "
                 f"cols={self.cols})")
 
+    # -- validation ---------------------------------------------------------
+
+    def validate(self, compiled: CompiledProgram,
+                 n_cols: int | None = None) -> None:
+        """Up-front column-budget checks, before any schedule upload or
+        launch: the program's row width (``compiled.min_cols``, the widest
+        compare/write column + 1) must fit the pool's per-array ``cols``,
+        and the row array must carry at least that many but no more than
+        ``cols`` digit columns.  A clear ValueError here beats an
+        out-of-bounds schedule index (or a silent clamp, depending on jit
+        mode) inside the kernel."""
+        if compiled.min_cols > self.cols:
+            raise ValueError(
+                f"program is {compiled.min_cols} columns wide, pool arrays "
+                f"have {self.cols} — compile a tiled program "
+                f"(compile_mac_tiled) or widen the pool")
+        if n_cols is None:
+            return
+        if n_cols < compiled.min_cols:
+            raise ValueError(
+                f"array has {n_cols} columns, program is "
+                f"{compiled.min_cols} columns wide")
+        if n_cols > self.cols:
+            raise ValueError(
+                f"rows carry {n_cols} digit columns, pool arrays hold "
+                f"{self.cols}")
+
     # -- schedule store -----------------------------------------------------
 
     def _device_schedule(self, compiled: CompiledProgram
@@ -115,19 +142,7 @@ class ArrayPool:
         bit-identical to single-array :func:`~repro.apc.exec.execute`.
         """
         n_rows, n_cols = arr.shape
-        if compiled.min_cols > self.cols:
-            raise ValueError(
-                f"program touches {compiled.min_cols} columns, pool arrays "
-                f"have {self.cols} — compile a tiled program "
-                f"(compile_mac_tiled) or widen the pool")
-        if n_cols < compiled.min_cols:
-            raise ValueError(
-                f"array has {n_cols} columns, program touches "
-                f"{compiled.min_cols}")
-        if n_cols > self.cols:
-            raise ValueError(
-                f"rows carry {n_cols} digit columns, pool arrays hold "
-                f"{self.cols}")
+        self.validate(compiled, n_cols=n_cols)
         if n_rows == 0:
             empty = jnp.zeros((1, 2 + HIST_BINS), jnp.int32)
             return (jnp.asarray(arr, jnp.int8),
@@ -174,7 +189,8 @@ def run_pooled(arr: jax.Array, compiled: CompiledProgram, pool: ArrayPool,
                *, stats: APStats | None = None,
                interpret: bool = True) -> jax.Array:
     """Driver-style front door: pool.run + optional APStats accumulate
-    (mirrors :func:`repro.apc.exec.run` for the single-array path)."""
+    (mirrors :func:`repro.apc.exec.run` for the single-array path).
+    ``pool.run`` validates the column budget before any schedule upload."""
     out, traced = pool.run(arr, compiled, collect_stats=stats is not None,
                            interpret=interpret)
     if stats is not None:
@@ -199,6 +215,7 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
     digits, same counters) — the tiled-vs-untiled equivalence oracle.
     """
     from .exec import execute                       # lazy: import cycle
+    from .graph import CARRIED, fold_stage_input, mac_fold_plan
     R, K = x.shape
     if K != tiled.K:
         raise ValueError(f"x has K={K}, tiled program compiled for "
@@ -206,6 +223,9 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
     if pool is not None and block_rows is not None:
         raise ValueError("block_rows only applies without pool=; the "
                          "pool's own rows govern block streaming")
+    if pool is not None:
+        for prog in tiled.programs + tiled.reduce_programs:
+            pool.validate(prog)                     # fail before any launch
     radix, width = tiled.radix, tiled.width
 
     def _run(arr, compiled):
@@ -230,16 +250,12 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
         out = _run(arr_t, prog)
         base = mac_layout(kt, width)["acc_base"]
         partials.append(out[:, base:base + width])
-    nxt = 0
-    for g, prog in zip(tiled.reduce_groups, tiled.reduce_programs):
-        fresh = g if nxt == 0 else g - 1            # later groups carry one
-        group = partials[nxt:nxt + fresh]
-        if nxt:
-            group = [carried] + group
-        nxt += fresh
-        arr_r = jnp.concatenate(
-            group + [jnp.zeros((R, 1), jnp.int8)], axis=1)
-        out = _run(arr_r, prog)
-        carried = out[:, (g - 1) * width:g * width]
-    final = carried if tiled.reduce_groups else partials[0]
-    return decode_signed_digits_jnp(final, radix)
+    # sequential replay of the shared fold plan (graph.mac_fold_plan is the
+    # single source of truth for which partials feed which reduction)
+    carried = partials[0]
+    for stage in mac_fold_plan(tiled):
+        group = [carried if p == CARRIED else partials[p]
+                 for p in stage.parts]
+        out = _run(fold_stage_input(group), stage.prog)
+        carried = out[:, stage.out_lo:stage.out_hi]
+    return decode_signed_digits_jnp(carried, radix)

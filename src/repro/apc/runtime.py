@@ -1,0 +1,216 @@
+"""AP runtime: program-graph scheduler over a device-sharded array pool.
+
+Two layers on top of the PR-3 :class:`~repro.apc.pool.ArrayPool`:
+
+- :class:`DevicePool` — the pool's array bank generalized to span a device
+  mesh via ``shard_map``: ONE pool of ``n_arrays * n_devices`` physical
+  MvCAM arrays.  Rows shard over the mesh's batch axes, every device
+  replays the same uploaded schedule tensors against its local bank
+  (blocks of ``rows`` rows, the kernel grid), and the traced APStats
+  counters are ``psum``-ed in-graph so every shard returns the global
+  counts — output digits and accumulated APStats stay bit-identical to a
+  single-array :func:`~repro.apc.exec.execute`.
+
+- :class:`Runtime` — executes a :class:`~repro.apc.graph.ProgramGraph`:
+  nodes run in topological wavefronts, every ready node's launch is issued
+  before any launch of the wave is drained (jax dispatch is asynchronous,
+  so independent programs pipeline into idle arrays instead of draining
+  each launch), dependency results flow node-to-node on device, and each
+  node's schedule-static cycles + traced counters fold into one APStats.
+  :meth:`Runtime.makespan` prices the same graph with the per-array
+  occupancy model (:func:`~repro.apc.graph.graph_makespan`) — the graph
+  generalization of ``ArrayPool.wall_cycles``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ap import APStats
+from ..kernels.tap_pass.ops import _pad_rows
+from ..launch.mesh import data_axes
+from .exec import sharded_program_run
+from .graph import ProgramGraph, graph_makespan
+from .lower import CompiledProgram
+from .pool import ArrayPool
+from .stats import HIST_BINS, TracedStats, accumulate
+
+__all__ = ["DevicePool", "Runtime", "GraphResult"]
+
+
+class DevicePool(ArrayPool):
+    """An :class:`ArrayPool` whose bank spans the devices of a mesh.
+
+    ``mesh=None`` degrades to the single-device ArrayPool (same dispatch
+    loop); with a mesh, ``run`` shard_maps row-shards over the mesh's
+    batch axes (``pod``/``data``, falling back to the first axis), each
+    device streaming its shard through ``n_arrays`` local arrays.
+    """
+
+    def __init__(self, mesh=None, *, n_arrays: int = 4, rows: int = 4096,
+                 cols: int = 256):
+        super().__init__(n_arrays=n_arrays, rows=rows, cols=cols)
+        self.mesh = mesh
+        if mesh is None:
+            self.axes: tuple[str, ...] = ()
+            self.n_devices = 1
+        else:
+            self.axes = data_axes(mesh) or tuple(mesh.axis_names[:1])
+            self.n_devices = math.prod(mesh.shape[a] for a in self.axes)
+
+    def __repr__(self) -> str:
+        return (f"DevicePool(n_devices={self.n_devices}, "
+                f"n_arrays={self.n_arrays}, rows={self.rows}, "
+                f"cols={self.cols})")
+
+    @property
+    def total_arrays(self) -> int:
+        return self.n_arrays * self.n_devices
+
+    def n_blocks_per_device(self, n_rows: int) -> int:
+        return -(-self.n_blocks(n_rows) // self.n_devices)
+
+    def wall_cycles(self, n_rows: int, n_compare_cycles: int,
+                    n_write_cycles: int) -> dict[str, int]:
+        """Pipelined wall clock: blocks split over devices first, then each
+        device's share streams over its local arrays —
+        ``ceil(ceil(blocks / devices) / arrays)`` replay waves."""
+        waves = max(1, -(-self.n_blocks_per_device(max(1, n_rows))
+                         // self.n_arrays))
+        return {"waves": waves,
+                "compare_cycles": waves * n_compare_cycles,
+                "write_cycles": waves * n_write_cycles}
+
+    def run(self, arr: jax.Array, compiled: CompiledProgram, *,
+            collect_stats: bool = False, interpret: bool = True
+            ) -> tuple[jax.Array, TracedStats | None]:
+        """Stream [rows, cols] digit rows through the device-spanning bank.
+
+        Bit-identical output and (when ``collect_stats``) APStats to the
+        single-array :func:`~repro.apc.exec.execute` — padding rows are
+        masked per shard and the per-block counters psum across devices.
+        """
+        if self.mesh is None:
+            return super().run(arr, compiled, collect_stats=collect_stats,
+                               interpret=interpret)
+        n_rows, n_cols = arr.shape
+        self.validate(compiled, n_cols=n_cols)
+        if n_rows == 0:
+            empty = jnp.zeros((1, 2 + HIST_BINS), jnp.int32)
+            return (jnp.asarray(arr, jnp.int8),
+                    TracedStats(empty) if collect_stats else None)
+        sched = self._device_schedule(compiled)
+        d = self.n_devices
+        # per-device shard: whole blocks of self.rows (kernel grid splits
+        # the shard back into per-array blocks); padding rows are masked
+        # per shard and the counters psummed by the shared scaffolding
+        rows_per_dev = -(-n_rows // d)
+        shard_rows = self.rows * max(1, -(-rows_per_dev // self.rows))
+        padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), d * shard_rows)
+        out, raw = sharded_program_run(
+            padded, sched, self.mesh, self.axes, n_rows, self.rows,
+            collect_stats=collect_stats, interpret=interpret)
+        out = out[:n_rows]
+        if collect_stats:
+            return out, TracedStats(raw)
+        return out, None
+
+
+class GraphResult(dict):
+    """``{node_id: result array}`` plus the run's occupancy report."""
+
+    def __init__(self, results: dict[int, jax.Array],
+                 report: dict[str, float]):
+        super().__init__(results)
+        self.report = report
+
+
+class Runtime:
+    """Schedules :class:`ProgramGraph` nodes over an array pool.
+
+    One runtime per pool; graphs are transient.  ``stats`` accumulation is
+    per node (schedule-static cycles + traced counters), so running a
+    graph charges exactly what running each program alone would.
+    """
+
+    def __init__(self, pool: ArrayPool, *, interpret: bool = True):
+        self.pool = pool
+        self.interpret = interpret
+        self.last_report: dict[str, float] | None = None
+
+    def __repr__(self) -> str:
+        return f"Runtime(pool={self.pool!r})"
+
+    @property
+    def n_devices(self) -> int:
+        return getattr(self.pool, "n_devices", 1)
+
+    def makespan(self, graph: ProgramGraph) -> dict[str, float]:
+        """Occupancy-model makespan of ``graph`` on this runtime's bank."""
+        return graph_makespan(graph, n_arrays=self.pool.n_arrays,
+                              rows_per_array=self.pool.rows,
+                              n_devices=self.n_devices)
+
+    def run_graph(self, graph: ProgramGraph, *,
+                  stats: APStats | None = None,
+                  order: list[int] | None = None) -> GraphResult:
+        """Execute the graph; returns every node's result keyed by node id.
+
+        ``order`` overrides the default wavefront order with any valid
+        topological linearization — results are bit-identical regardless
+        (node builds are pure functions of dependency results), which the
+        scheduler property tests pin down.
+        """
+        nodes = graph.nodes
+        if order is None:
+            order = [nid for wave in graph.wavefronts() for nid in wave]
+        if sorted(order) != list(range(len(nodes))):
+            raise ValueError("order must be a permutation of all node ids")
+        done: set[int] = set()
+        results: dict[int, jax.Array] = {}
+        traced: list[tuple[int, TracedStats | None]] = []
+        collect = stats is not None
+        for nid in order:
+            node = nodes[nid]
+            if any(d not in done for d in node.deps):
+                raise ValueError(
+                    f"order runs node {nid} before its dependencies "
+                    f"{tuple(d for d in node.deps if d not in done)}")
+            arr = node.build(*(results[d] for d in node.deps))
+            if arr.ndim != 2 or arr.shape[0] != node.rows:
+                raise ValueError(
+                    f"node {nid} ({node.label or 'unlabeled'}) built a "
+                    f"{arr.shape} array, declared rows={node.rows}")
+            # issue the launch; jax dispatch is async, so launches of
+            # independent nodes in the same wavefront overlap in flight —
+            # the pool's own double buffering spreads blocks over arrays
+            out, tr = self.pool.run(arr, node.compiled,
+                                    collect_stats=collect,
+                                    interpret=self.interpret)
+            results[nid] = node.result(out)
+            traced.append((nid, tr))
+            done.add(nid)
+        if stats is not None:
+            for nid, tr in traced:
+                accumulate(stats, tr, nodes[nid].compiled,
+                           n_rows=nodes[nid].rows)
+        res = GraphResult(results, self.makespan(graph))
+        self.last_report = res.report
+        return res
+
+    def run_mac_graph(self, macs, *, stats: APStats | None = None
+                      ) -> list[jax.Array]:
+        """Convenience: run many independent K-tiled MACs as ONE graph.
+
+        ``macs`` is a sequence of ``(x, w_ter, tiled)`` triples (see
+        :meth:`ProgramGraph.add_mac_tiled`); returns the [R, width]
+        accumulator digit block of each MAC, scheduled with all tile
+        programs interleaved across the bank.
+        """
+        graph = ProgramGraph()
+        finals = [graph.add_mac_tiled(x, w, tiled, label=f"mac{i}:")
+                  for i, (x, w, tiled) in enumerate(macs)]
+        res = self.run_graph(graph, stats=stats)
+        return [res[f] for f in finals]

@@ -84,7 +84,8 @@ def default_k_tile(cols: int, width: int) -> int:
 
 def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
                       *, radix: int = 3, width: int | None = None,
-                      mesh=None, pool=None, k_tile: int | None = None,
+                      mesh=None, pool=None, runtime=None,
+                      k_tile: int | None = None,
                       stats=None, block_rows: int | None = None,
                       blocked: bool = False,
                       interpret: bool = True) -> jax.Array:
@@ -101,12 +102,15 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
     Execution routing: ``pool=`` (an :class:`repro.apc.ArrayPool`) streams
     the M*N rows through the array bank, K-tiling the MAC to the pool's
     column budget (``k_tile`` overrides the derived tile; it must fit);
-    ``k_tile`` alone runs the tiled programs on the single-array executor
-    (the tiled-vs-untiled oracle); ``mesh`` shards the M*N row axis.
-    Bit-exact vs :func:`~repro.kernels.ternary_matmul.ref.
-    ternary_matmul_ref` on every route because the integer accumulator
-    converts to float32 exactly and the final scale-multiply is the same
-    float32 op.
+    ``runtime=`` (an :class:`repro.apc.Runtime`) builds the tiled MAC as a
+    :class:`repro.apc.ProgramGraph` and schedules it over the runtime's
+    (possibly device-spanning) bank — same digits, same counters, plus the
+    graph makespan in ``runtime.last_report``; ``k_tile`` alone runs the
+    tiled programs on the single-array executor (the tiled-vs-untiled
+    oracle); ``mesh`` shards the M*N row axis.  Bit-exact vs
+    :func:`~repro.kernels.ternary_matmul.ref.ternary_matmul_ref` on every
+    route because the integer accumulator converts to float32 exactly and
+    the final scale-multiply is the same float32 op.
     """
     from repro import apc
 
@@ -128,9 +132,28 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
             f"signed decode needs width >= {req_width} "
             f"(mac_acc_width({radix}, {kp}, {max_abs}))")
     # row (m, n) <- (x[m, :], w[:, n]): M*N dot products, device-side
-    x_rows = jnp.repeat(xi, n, axis=0)                             # [M*N, K']
-    w_rows = jnp.tile(w_ter.T, (m, 1))                             # [M*N, K']
-    if pool is not None or k_tile is not None:
+    x_rows, w_rows = apc.matmul_mac_rows(xi, w_ter)                # [M*N, K']
+    if runtime is not None:
+        if mesh is not None or pool is not None:
+            raise ValueError("runtime= already carries a pool; pass one of "
+                             "mesh=, pool=, or runtime=")
+        if block_rows is not None:
+            raise ValueError("block_rows only applies without runtime=; "
+                             "the runtime pool's own rows govern blocks")
+        if interpret != runtime.interpret:
+            raise ValueError(
+                f"interpret={interpret} conflicts with "
+                f"Runtime(interpret={runtime.interpret}); set it on the "
+                f"Runtime")
+        max_cols = runtime.pool.cols
+        kt = k_tile if k_tile is not None else default_k_tile(max_cols,
+                                                              width)
+        tiled = apc.compile_mac_tiled(radix, kp, width, kt,
+                                      blocked=blocked, max_cols=max_cols)
+        (digits,) = runtime.run_mac_graph([(x_rows, w_rows, tiled)],
+                                          stats=stats)
+        acc = apc.decode_signed_digits_jnp(digits, radix)
+    elif pool is not None or k_tile is not None:
         if mesh is not None:
             raise ValueError("the tiled/pool route does not mesh-shard; "
                              "pass one of mesh= or pool=/k_tile=")

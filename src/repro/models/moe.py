@@ -161,9 +161,33 @@ def _local_moe_ep(x, router, w1, w3, w2, *, cfg: MoECfg, act: str,
     return y_full.reshape(b, s, d)
 
 
+def moe_ffn_ap(p: dict, x: jax.Array, cfg: MoECfg, act: str,
+               ctx) -> jax.Array:
+    """AP-served MoE: router runs in float, then every routed expert's
+    SwiGLU projections go through :func:`repro.apc.layers.ap_moe_dispatch`
+    as independent tiled-MAC subgraphs of one ProgramGraph — tiles of
+    different experts interleave across the array bank, the multi-matmul
+    occupancy workload the AP runtime exists for.  Expert weights ternarize
+    (absmean per-channel) via the context's per-stack cache."""
+    from ..apc.layers import ap_moe_dispatch
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    gates, experts = _route(x2d, p["router"], cfg)
+    w1l = ctx.expert_linears("moe.w1", p["w1"], label="moe.w1.")
+    w3l = ctx.expert_linears("moe.w3", p["w3"], label="moe.w3.")
+    w2l = ctx.expert_linears("moe.w2", p["w2"], label="moe.w2.")
+    y2d = ap_moe_dispatch(ctx, x2d, experts, gates, w1l, w3l, w2l,
+                          act_fn(act))
+    return y2d.reshape(b, s, d).astype(x.dtype)
+
+
 def moe_ffn(p: dict, x: jax.Array, cfg: MoECfg, act: str,
             mesh: jax.sharding.Mesh) -> jax.Array:
     """Public MoE entry: wraps the local body in shard_map on `mesh`."""
+    from ..apc.layers import current_ap_context
+    ctx = current_ap_context()
+    if ctx is not None:                      # AP-backed serving path
+        return moe_ffn_ap(p, x, cfg, act, ctx)
     tp_size = mesh.shape[MODEL_AXIS]
     da = mesh_data_axes(mesh)
     dp = 1

@@ -5,9 +5,17 @@ the same serve_step the decode dry-run cells lower.  Batched requests of
 unequal prompt lengths are right-aligned with left-padding masks folded into
 the cache positions (simple token-stepped prefill: correctness-first; the
 dry-run's prefill cell lowers the parallel forward path).
+
+AP-backed serving: constructing the engine with ``ap_ctx`` (an
+:class:`repro.apc.layers.APServeContext`) routes every packed-ternary MLP /
+MoE projection of the forward pass through the AP program-graph runtime —
+the step runs eagerly (the AP path is the functional simulator, with host
+syncs), and :meth:`Engine.ap_report` returns the request's aggregated
+write/compare cycles, Table XI energy, and graph-scheduler makespan.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from dataclasses import dataclass
 
 import jax
@@ -26,12 +34,17 @@ class ServeCfg:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, mesh, serve: ServeCfg):
+    def __init__(self, cfg: ModelConfig, params, mesh, serve: ServeCfg,
+                 ap_ctx=None):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
         self.serve = serve
-        self._step = jax.jit(self._decode_step)
+        self.ap_ctx = ap_ctx
+        # the AP path cannot live under jit (program-graph execution is
+        # host-orchestrated); everything else compiles as before
+        self._step = (self._decode_step if ap_ctx is not None
+                      else jax.jit(self._decode_step))
 
     def _decode_step(self, params, cache, tokens, pos):
         return M.decode_step(self.cfg, params, cache, tokens, pos, self.mesh)
@@ -46,7 +59,13 @@ class Engine:
         cache = M.init_cache(self.cfg, b, self.serve.max_len,
                              cross_len=cross_len)
         key = jax.random.PRNGKey(self.serve.seed)
-        with self.mesh:
+        if self.ap_ctx is not None:
+            from ..apc.layers import ap_serving
+            self.ap_ctx.reset()            # per-request aggregation
+            ap_guard = ap_serving(self.ap_ctx)
+        else:
+            ap_guard = nullcontext()
+        with self.mesh, ap_guard:
             # prefill: feed prompt tokens one step at a time
             logits = None
             for i in range(s_prompt):
@@ -62,6 +81,13 @@ class Engine:
                 key = jax.random.fold_in(key, j)
                 tok = self._sample(logits, key)
         return np.stack(out, axis=1)
+
+    def ap_report(self) -> dict | None:
+        """Aggregated AP accounting of the last :meth:`generate` request:
+        write/compare cycles, sets/resets, Table XI energy, and the graph
+        scheduler's makespan vs naive sequential drains.  None when the
+        engine serves without an AP context."""
+        return None if self.ap_ctx is None else self.ap_ctx.report()
 
     def _sample(self, logits, key):
         if self.serve.temperature <= 0:

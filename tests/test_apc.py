@@ -49,7 +49,8 @@ def test_apc_addsub_matches_oracle(radix, op):
     assert np.array_equal(got, want)
 
 
-@pytest.mark.parametrize("radix", [3, 4])
+@pytest.mark.slow              # interpreted-oracle multiply replay: O(r^2)
+@pytest.mark.parametrize("radix", [3, 4])  # sweeps per digit, ~25s at r=4
 def test_apc_multiply_matches_oracle(radix):
     w, rows = 3, 65
     lut_add = build_lut_nonblocked(tt.full_adder(radix))
@@ -74,7 +75,10 @@ def test_apc_multiply_matches_oracle(radix):
     assert np.array_equal(ap.decode_digits(out_f, list(range(w)), radix), a)
 
 
-@pytest.mark.parametrize("fn", ["add", "sub", "mul"])
+@pytest.mark.parametrize("fn", [
+    "add", "sub",
+    # interpreted-oracle multiply replay at radix 5: ~36s, slow-marked
+    pytest.param("mul", marks=pytest.mark.slow)])
 def test_apc_radix5_compile_named_vs_oracle(fn):
     """ROADMAP radix-5 item: the fused compile_named programs (not just the
     LUT generators) validated end-to-end against the interpreted replay

@@ -64,3 +64,45 @@ def test_bench_ap_pool_smoke_schema():
     # schedule totals are n_arrays-independent; pipelined waves shrink
     assert rows[0]["write_cycles"] == rows[1]["write_cycles"]
     assert rows[0]["waves"] >= rows[1]["waves"]
+
+
+def test_bench_ap_runtime_smoke_schema():
+    """CI smoke: the ap_runtime trajectory rows keep their schema at toy
+    sizes, makespan <= sequential on every row, and >1 array pipelines
+    strictly better than the naive drains."""
+    from benchmarks.kernels_bench import bench_ap_runtime
+    rows = bench_ap_runtime(g_programs=2, m=2, k=12, n=2, pool_rows=4,
+                            k_tile=4, n_arrays_list=(1, 2),
+                            n_devices_list=(1,), n_timing=1)
+    assert len(rows) == 2
+    keys = {"bench", "g_programs", "m", "k", "n", "radix", "acc_width",
+            "k_tile", "n_tiles", "cols_budget", "pool_rows", "n_arrays",
+            "n_devices", "n_arrays_total", "n_nodes", "us_runtime",
+            "us_sequential", "makespan_cycles", "sequential_cycles",
+            "makespan_ns", "sequential_ns", "pipeline_speedup_x",
+            "write_cycles", "compare_cycles"}
+    for r in rows:
+        assert keys <= set(r)
+        assert r["bench"] == "ap_runtime" and r["n_tiles"] >= 2
+        assert r["makespan_cycles"] <= r["sequential_cycles"]
+    # schedule totals are geometry-independent; >1 array pipelines strictly
+    assert rows[0]["write_cycles"] == rows[1]["write_cycles"]
+    assert rows[1]["makespan_cycles"] < rows[1]["sequential_cycles"]
+
+
+def test_apc_bench_json_recorded_ap_runtime_rows():
+    """The RECORDED benchmarks/apc_bench.json must carry the ap_runtime
+    trajectory with the makespan <= sequential invariant intact."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks", "apc_bench.json")
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("ap_runtime", [])
+    assert rows, "apc_bench.json is missing the ap_runtime trajectory"
+    for r in rows:
+        assert r["makespan_cycles"] <= r["sequential_cycles"]
+        assert r["n_arrays_total"] == r["n_arrays"] * r["n_devices"]
+        if r["n_arrays_total"] > 1:
+            assert r["makespan_cycles"] < r["sequential_cycles"]

@@ -139,6 +139,28 @@ def test_pool_column_budget_enforced():
         apc.ArrayPool(n_arrays=0)
 
 
+def test_pool_validate_up_front_names_width():
+    """run/run_pooled/run_mac_tiled reject an over-wide program BEFORE any
+    schedule upload or launch, naming the program width (regression: an
+    oversized schedule used to reach the kernel, indexing out of bounds or
+    silently clamping depending on jit mode)."""
+    compiled = apc.compile_mac(3, 8, 3)          # 36-column MAC row
+    pool = apc.ArrayPool(n_arrays=1, rows=8, cols=16)
+    with pytest.raises(ValueError, match="36 columns wide"):
+        apc.run_pooled(jnp.zeros((4, 36), jnp.int8), compiled, pool)
+    with pytest.raises(ValueError, match="36 columns wide"):
+        pool.run(jnp.zeros((4, 36), jnp.int8), compiled)
+    assert len(pool._schedules) == 0             # nothing was uploaded
+    # run_mac_tiled validates every constituent program up front too
+    tiled = apc.compile_mac_tiled(3, 8, 3, 4)    # 20-column tile rows
+    with pytest.raises(ValueError, match="columns wide"):
+        apc.run_mac_tiled(jnp.zeros((4, 8), jnp.int32),
+                          jnp.zeros((4, 8), jnp.int8), tiled, pool=pool)
+    # fits exactly: no error
+    pool_ok = apc.ArrayPool(n_arrays=1, rows=8, cols=36)
+    pool_ok.validate(compiled, n_cols=36)
+
+
 def test_pool_reduce_plan_chains_under_budget():
     """Many tiles + tight budget: the reduction chains in groups, still
     bit-exact."""
