@@ -22,6 +22,11 @@ structural HBM-traffic/bytes arithmetic for the TPU roofline story).
    makespan vs sequential wall-cycle sum ("ap_runtime" trajectory).
    n_devices > 1 rows appear when the process sees multiple devices
    (XLA_FLAGS=--xla_force_host_platform_device_count=4).
+7. ap kernel: the program-kernel formulation matrix ("ap_kernel"
+   trajectory) — gather (seed baseline, pallas interpret) vs the compiled
+   one-hot and one-hot+VLIW-packed bodies (interpret=False), across
+   program classes and row counts, with the list scheduler's trip-count /
+   group-width statistics per program.
 """
 from __future__ import annotations
 
@@ -132,6 +137,86 @@ def bench_apc(rows_list=(1024, 65536), widths=(8, 20),
             json.dump({"bench": "apc_vs_replay", "results": results}, f,
                       indent=2)
         print(f"apc bench JSON -> {json_path}")
+    return results
+
+
+def _encode_named(fn: str, radix: int, width: int, rows: int, rng):
+    """Random digit rows in the layout of a compile_named program."""
+    a = rng.integers(0, radix ** width, rows)
+    b = rng.integers(0, radix ** width, rows)
+    if fn == "mul":
+        arr = np.zeros((rows, 5 * width + 1), np.int8)
+        for i in range(width):
+            arr[:, i] = arr[:, width + i] = (a // radix ** i) % radix
+            arr[:, 2 * width + i] = (b // radix ** i) % radix
+        return jnp.asarray(arr)
+    extra = 0 if fn in ("min", "max", "modsum", "nor", "nand") else 1
+    return jnp.asarray(ap.encode_operands(a, b, radix, width,
+                                          extra_cols=extra))
+
+
+def bench_ap_kernel(programs=(("add", 3, 20), ("mul", 3, 5), ("max", 3, 8)),
+                    rows_list=(4096, 65536), n_timing: int = 3,
+                    collect_stats: bool = True) -> list[dict]:
+    """Program-kernel formulation matrix: gather vs one-hot vs one-hot+packed
+    ("ap_kernel" trajectory).
+
+    The BASELINE column (``gather_interp_us``) is the seed default — the
+    dynamic-gather body under the pallas interpreter; the other columns run
+    the compiled paths (``interpret=False``: jitted XLA on this host,
+    Mosaic on TPU).  Two structural columns tell the packing story
+    (``packed_groups``/``pack``: the VLIW trip count and group width the
+    list scheduler reached — carry-ripple programs are critical-path-bound
+    near 1x, digitwise programs pack ~width x).  Digits are asserted
+    bit-equal across every variant each run.  On CPU hosts the gather body
+    stays fastest (its per-step work is O(rows x C) vs the one-hot body's
+    O(rows x n_cols) — the host has cheap gathers and no lane hazard), so
+    expect speedup_* < 1 here; the one-hot columns are the TPU-native
+    formulation the ROADMAP asked to benchmark, measured honestly on
+    whatever backend runs the bench.
+    """
+    results = []
+    for fn, radix, width in programs:
+        compiled = apc.compile_named(fn, radix, width)
+        packed = compiled.packed()
+        for rows in rows_list:
+            rng = np.random.default_rng(rows + width)
+            arr = _encode_named(fn, radix, width, rows, rng)
+            row = {"bench": "ap_kernel", "op": fn, "radix": radix,
+                   "width": width, "rows": rows,
+                   "n_steps": compiled.n_steps,
+                   "packed_groups": packed.n_groups, "pack": packed.pack,
+                   "pack_efficiency": round(packed.efficiency, 3),
+                   "collect_stats": collect_stats}
+            outs = {}
+            for label, kv, interp in (
+                    ("gather_interp_us", "gather", True),
+                    ("gather_us", "gather", False),
+                    ("onehot_us", "onehot", False),
+                    ("onehot_packed_us", "onehot_packed", False)):
+                f = lambda: apc.execute(arr, compiled,
+                                        collect_stats=collect_stats,
+                                        kernel_variant=kv, interpret=interp)
+                # the compile warm-up run doubles as the parity capture —
+                # the interp baseline at the big shapes costs minutes, so
+                # never run a cell more than 1 + n_timing times
+                outs[label] = np.asarray(jax.block_until_ready(f()[0]))
+                t0 = time.perf_counter()
+                for _ in range(n_timing):
+                    jax.block_until_ready(f()[0])
+                row[label] = round((time.perf_counter() - t0)
+                                   / n_timing * 1e6)
+            base = outs["gather_interp_us"]
+            assert all(np.array_equal(o, base) for o in outs.values())
+            for label in ("gather_us", "onehot_us", "onehot_packed_us"):
+                row[f"speedup_{label[:-3]}_x"] = round(
+                    row["gather_interp_us"] / max(1, row[label]), 2)
+            results.append(row)
+            print(f"ap_kernel_{fn}{radix}x{width}_{rows},"
+                  f"{row['onehot_packed_us']},"
+                  f"interp_base={row['gather_interp_us']}us_"
+                  f"groups={row['packed_groups']}/{row['n_steps']}"
+                  f"_pack={row['pack']}")
     return results
 
 
@@ -352,6 +437,7 @@ def main():
     # persist after each stage: the interpreted-replay baseline takes
     # minutes, so a later-stage failure must not discard it
     apc_rows = bench_apc(rows_list=rows, json_path=args.json)
+    kernel_rows = bench_ap_kernel()
     matmul_rows = bench_ap_matmul()
     pool_rows = bench_ap_pool()
     n_dev = len(jax.devices())
@@ -359,8 +445,8 @@ def main():
         n_devices_list=(1,) if n_dev == 1 else (1, n_dev))
     with open(args.json, "w") as f:
         json.dump({"bench": "apc_vs_replay", "results": apc_rows,
-                   "ap_matmul": matmul_rows, "ap_pool": pool_rows,
-                   "ap_runtime": runtime_rows}, f,
+                   "ap_kernel": kernel_rows, "ap_matmul": matmul_rows,
+                   "ap_pool": pool_rows, "ap_runtime": runtime_rows}, f,
                   indent=2)
     print(f"apc bench JSON -> {args.json}")
 

@@ -79,8 +79,10 @@ Typical use::
 or via the drivers: ``repro.core.ap.ripple_add(..., engine="apc")``.
 """
 from . import exec as exec  # noqa: PLC0414 — re-export the module
-from . import (graph as graph_mod, ir, layers as layers_mod, lower, mac,
-               pool as pool_mod, runtime as runtime_mod, stats)
+from . import (caches as caches_mod, graph as graph_mod, ir,
+               layers as layers_mod, lower, mac, pool as pool_mod,
+               runtime as runtime_mod, stats)
+from .caches import cache_stats, clear_compile_caches
 from .exec import execute, execute_sharded, run
 from .graph import (CARRIED, FoldStage, GraphNode, ProgramGraph,
                     fold_stage_input, graph_makespan, mac_fold_plan)
@@ -89,9 +91,11 @@ from .layers import (APLinear, APServeContext, ap_moe_dispatch, ap_serving,
 from .runtime import DevicePool, GraphResult, Runtime
 from .ir import (AffineCol, ApplyLUT, CompareWrite, ForDigit, Program,
                  RelCol, SetCol, ZeroCol, digit)
-from .lower import (CompiledProgram, Step, compile_named, compile_program,
+from .lower import (KERNEL_VARIANTS, CompiledProgram, PackedProgram, Step,
+                    compile_named, compile_program, default_kernel_variant,
                     elementwise_program, lower as lower_program,
-                    multiply_program, negate_program, ripple_add_program,
+                    multiply_program, negate_program, pack_steps,
+                    resolve_schedule, ripple_add_program,
                     ripple_sub_program)
 from .mac import (TiledMac, compile_mac, compile_mac_reduce,
                   compile_mac_tiled, decode_mac_acc, decode_mac_acc_jnp,
@@ -102,8 +106,9 @@ from .pool import ArrayPool, run_mac_tiled, run_pooled
 from .stats import TracedStats, accumulate, to_ap_stats
 
 __all__ = [
-    "exec", "graph_mod", "ir", "layers_mod", "lower", "mac", "pool_mod",
-    "runtime_mod", "stats",
+    "caches_mod", "exec", "graph_mod", "ir", "layers_mod", "lower", "mac",
+    "pool_mod", "runtime_mod", "stats",
+    "cache_stats", "clear_compile_caches",
     "execute", "execute_sharded", "run",
     "CARRIED", "FoldStage", "GraphNode", "ProgramGraph", "fold_stage_input",
     "graph_makespan", "mac_fold_plan",
@@ -112,9 +117,11 @@ __all__ = [
     "DevicePool", "GraphResult", "Runtime",
     "AffineCol", "ApplyLUT", "CompareWrite", "ForDigit", "Program", "RelCol",
     "SetCol", "ZeroCol", "digit",
-    "CompiledProgram", "Step", "compile_named", "compile_program",
+    "KERNEL_VARIANTS", "CompiledProgram", "PackedProgram", "Step",
+    "compile_named", "compile_program", "default_kernel_variant",
     "elementwise_program", "lower_program", "multiply_program",
-    "negate_program", "ripple_add_program", "ripple_sub_program",
+    "negate_program", "pack_steps", "resolve_schedule",
+    "ripple_add_program", "ripple_sub_program",
     "TiledMac", "compile_mac", "compile_mac_reduce", "compile_mac_tiled",
     "decode_mac_acc", "decode_mac_acc_jnp", "decode_signed_digits_jnp",
     "encode_mac_rows", "encode_mac_rows_jnp", "mac_acc_width", "mac_layout",

@@ -1,0 +1,49 @@
+"""Program-compilation cache registry: bounds + stats in one place.
+
+Every compilation step on the serving path memoizes — LUT builds
+(:mod:`repro.core.nonblocked` / :mod:`repro.core.blocked`), schedule
+lowering+packing (:func:`repro.apc.lower._compile_steps`), named programs
+(:func:`repro.apc.lower.compile_named`), and the MAC family
+(:mod:`repro.apc.mac`).  All of them are ``lru_cache``-bounded so a
+long-running :class:`repro.serve.engine.Engine` process cannot grow without
+limit, and this module is the single place that knows the full set: the
+``test_compile_caches_all_bounded`` test walks :func:`registry` and fails
+if anyone adds an unbounded cache, and
+:meth:`repro.apc.layers.APServeContext.cache_stats` surfaces
+:func:`cache_stats` (hits / misses / occupancy) per serving context.
+"""
+from __future__ import annotations
+
+
+def registry() -> dict:
+    """Name -> lru-cached callable, for every compilation cache."""
+    from ..core import blocked, nonblocked
+    from . import lower, mac
+    return {
+        "lut_nonblocked": nonblocked._build_lut_nonblocked_cached,
+        "lut_blocked": blocked._build_lut_blocked_cached,
+        "compile_steps": lower._compile_steps,
+        "compile_named": lower.compile_named,
+        "compile_mac": mac.compile_mac,
+        "compile_mac_reduce": mac.compile_mac_reduce,
+        "compile_mac_tiled": mac.compile_mac_tiled,
+    }
+
+
+def cache_stats() -> dict[str, dict[str, int]]:
+    """Per-cache ``{hits, misses, maxsize, currsize}`` snapshot."""
+    return {name: {"hits": info.hits, "misses": info.misses,
+                   "maxsize": info.maxsize, "currsize": info.currsize}
+            for name, fn in registry().items()
+            for info in (fn.cache_info(),)}
+
+
+def clear_compile_caches() -> None:
+    """Drop every compilation cache (tests; memory-pressure escape hatch).
+
+    Safe at any quiescent point: entries rebuild on demand, and in-flight
+    :class:`~repro.apc.lower.CompiledProgram` references stay valid (the
+    caches only pin, never own, the compiled objects).
+    """
+    for fn in registry().values():
+        fn.cache_clear()

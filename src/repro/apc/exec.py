@@ -1,11 +1,21 @@
 """Fused sharded executor for compiled AP programs.
 
-One ``pallas_call`` per row-block replays the ENTIRE flattened program
-against the VMEM-resident tile — a 20-trit add (421 steps) or a shift-and-add
+One program launch per row-block replays the ENTIRE flattened program
+against the resident tile — a 20-trit add (421 steps) or a shift-and-add
 multiply (thousands of steps) costs one HBM read + one HBM write per block
 instead of one round-trip per pass.  Long schedules stay cheap to trace: the
 kernel fori-loops over the packed schedule tensors
 (:class:`~repro.apc.lower.CompiledProgram`).
+
+Kernel variants (``kernel_variant=``, default the fastest bit-exact path):
+
+- ``"gather"`` — the original dynamic-column-gather body (pallas interpret
+  everywhere; lane-hostile compiled).
+- ``"onehot"`` — static one-hot compare/write algebra, compiles with
+  ``interpret=False`` (Mosaic on TPU, plain XLA elsewhere).
+- ``"onehot_packed"`` — one-hot over the VLIW-packed schedule
+  (:func:`~repro.apc.lower.pack_steps`): fewer fori_loop trips, same
+  digits and APStats.
 
 Rows are the data-parallel axis. :func:`execute` runs on whatever device
 holds the array; :func:`execute_sharded` shard_maps row-blocks over the
@@ -32,7 +42,7 @@ from ..kernels.tap_pass.kernel import tap_run_program
 from ..kernels.tap_pass.ops import _pad_rows
 from ..launch.mesh import data_axes
 from .ir import Program
-from .lower import CompiledProgram, compile_program
+from .lower import CompiledProgram, compile_program, resolve_schedule
 from .stats import HIST_BINS, TracedStats, accumulate
 
 BLOCK_ROWS = 4096        # fused-program default: fewer, fatter row-blocks
@@ -40,13 +50,16 @@ BLOCK_ROWS = 4096        # fused-program default: fewer, fatter row-blocks
 
 def execute(arr: jax.Array, compiled: CompiledProgram, *,
             collect_stats: bool = False, block_rows: int | None = None,
-            interpret: bool = True
+            interpret: bool | None = None, kernel_variant: str | None = None,
+            unroll: int | None = None
             ) -> tuple[jax.Array, TracedStats | None]:
     """Run a compiled program on [rows, cols] int8 digits.
 
     Returns ``(out, traced)``; ``traced`` is ``None`` unless
     ``collect_stats`` — stats cost extra in-kernel reductions, so the pure
     path skips them entirely (static flag, separate compiled kernel).
+    ``kernel_variant``/``interpret``/``unroll`` default to the measured
+    fastest bit-exact configuration (module docstring).
     """
     rows, cols = arr.shape
     if cols < compiled.min_cols:
@@ -55,21 +68,22 @@ def execute(arr: jax.Array, compiled: CompiledProgram, *,
     if rows == 0:                       # empty batch: no launch, zero counts
         traced = TracedStats(jnp.zeros((1, 2 + HIST_BINS), jnp.int32))
         return jnp.asarray(arr, jnp.int8), traced if collect_stats else None
+    sched, variant, pack, _ = resolve_schedule(compiled, kernel_variant)
     block_rows = block_rows or min(BLOCK_ROWS, max(8, rows))
     padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), block_rows)
     out, raw = tap_run_program(
-        padded, compiled.cmp_cols, compiled.keys, compiled.key_valid,
-        compiled.hist_flag, compiled.wr_cols, compiled.wr_vals,
-        jnp.int32(rows), block_rows=block_rows,
+        padded, *sched, jnp.int32(rows), block_rows=block_rows,
         collect_stats=collect_stats, hist_bins=HIST_BINS,
-        interpret=interpret)
+        interpret=interpret, unroll=unroll, variant=variant, pack=pack)
     out = out[:rows]
     return out, (TracedStats(block_counts=raw) if collect_stats else None)
 
 
 def sharded_program_run(padded: jax.Array, sched: tuple, mesh, axes,
                         rows: int, block_rows: int, *,
-                        collect_stats: bool, interpret: bool
+                        collect_stats: bool, interpret: bool | None,
+                        variant: str = "gather", pack: int = 1,
+                        unroll: int | None = None
                         ) -> tuple[jax.Array, jax.Array]:
     """shard_map scaffolding shared by :func:`execute_sharded` and
     :class:`repro.apc.runtime.DevicePool`: split ``padded`` (rows already a
@@ -92,7 +106,7 @@ def sharded_program_run(padded: jax.Array, sched: tuple, mesh, axes,
         out, raw = tap_run_program(
             a, *sched, n_local, block_rows=block_rows,
             collect_stats=collect_stats, hist_bins=HIST_BINS,
-            interpret=interpret)
+            interpret=interpret, unroll=unroll, variant=variant, pack=pack)
         if collect_stats:
             # elementwise-add the (n_blocks, counters) tensors across shards;
             # the int64 total reduction stays on the host (stats.accumulate)
@@ -107,7 +121,10 @@ def sharded_program_run(padded: jax.Array, sched: tuple, mesh, axes,
 
 def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
                     collect_stats: bool = False,
-                    block_rows: int | None = None, interpret: bool = True
+                    block_rows: int | None = None,
+                    interpret: bool | None = None,
+                    kernel_variant: str | None = None,
+                    unroll: int | None = None
                     ) -> tuple[jax.Array, TracedStats | None]:
     """Shard rows over the mesh's batch axes and run the fused kernel
     per-shard; traced counters are psummed so the returned stats are global.
@@ -117,15 +134,16 @@ def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
     rows, cols = arr.shape
     if rows == 0:                       # empty batch: skip the shard_map
         return execute(arr, compiled, collect_stats=collect_stats,
-                       block_rows=block_rows, interpret=interpret)
+                       block_rows=block_rows, interpret=interpret,
+                       kernel_variant=kernel_variant, unroll=unroll)
     block_rows = block_rows or min(BLOCK_ROWS,
                                    max(8, -(-rows // n_shards)))
     padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), n_shards * block_rows)
-    sched = (compiled.cmp_cols, compiled.keys, compiled.key_valid,
-             compiled.hist_flag, compiled.wr_cols, compiled.wr_vals)
+    sched, variant, pack, _ = resolve_schedule(compiled, kernel_variant)
     out, raw = sharded_program_run(padded, sched, mesh, axes, rows,
                                    block_rows, collect_stats=collect_stats,
-                                   interpret=interpret)
+                                   interpret=interpret, variant=variant,
+                                   pack=pack, unroll=unroll)
     out = out[:rows]
     if collect_stats:
         return out, TracedStats(raw)
@@ -138,7 +156,9 @@ def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
 
 def run(arr: jax.Array, program: Program | CompiledProgram, *,
         stats: APStats | None = None, mesh=None, pool=None,
-        block_rows: int | None = None, interpret: bool = True) -> jax.Array:
+        block_rows: int | None = None, interpret: bool | None = None,
+        kernel_variant: str | None = None,
+        unroll: int | None = None) -> jax.Array:
     """Compile (cached) + execute; optionally merge traced counters into an
     existing :class:`APStats` (one host sync, after the run completes).
 
@@ -156,9 +176,11 @@ def run(arr: jax.Array, program: Program | CompiledProgram, *,
                              "pool's own rows govern block streaming")
         from .pool import run_pooled                # lazy: import cycle
         return run_pooled(arr, compiled, pool, stats=stats,
-                          interpret=interpret)
+                          interpret=interpret, kernel_variant=kernel_variant,
+                          unroll=unroll)
     kw = dict(collect_stats=stats is not None, block_rows=block_rows,
-              interpret=interpret)
+              interpret=interpret, kernel_variant=kernel_variant,
+              unroll=unroll)
     if mesh is not None:
         out, traced = execute_sharded(arr, compiled, mesh, **kw)
     else:

@@ -219,6 +219,20 @@ class APServeContext:
         self.n_programs += res.report["n_nodes"]
         return res
 
+    def cache_stats(self) -> dict:
+        """Occupancy of every compilation/serving cache this context rides:
+        the process-wide bounded compile caches (:mod:`repro.apc.caches`),
+        the pool's uploaded-schedule store, and the per-context APLinear
+        cache — the numbers to watch in a long-running serve.Engine."""
+        from .caches import cache_stats
+        return {
+            "compile": cache_stats(),
+            "pool_schedules": len(self.runtime.pool._schedules),
+            "pool_schedules_max": self.runtime.pool._max_schedules,
+            "linears": len(self._linears),
+            "linears_max": self._max_linears,
+        }
+
     def report(self, n_masked: int = N_MASKED_MAC) -> dict:
         """Aggregated per-request accounting: functional-simulator counters
         + Table XI energy + graph-scheduler occupancy."""

@@ -45,7 +45,7 @@ import jax.numpy as jnp
 from ..core.ap import APStats
 from ..kernels.tap_pass.kernel import tap_run_program
 from ..kernels.tap_pass.ops import _pad_rows
-from .lower import CompiledProgram
+from .lower import CompiledProgram, resolve_schedule
 from .mac import (TiledMac, decode_signed_digits_jnp, encode_mac_rows_jnp,
                   mac_layout)
 from .stats import HIST_BINS, TracedStats, accumulate
@@ -55,7 +55,8 @@ class ArrayPool:
     """A bank of ``n_arrays`` MvCAM arrays of ``rows`` x ``cols`` digits."""
 
     def __init__(self, n_arrays: int = 4, rows: int = 4096,
-                 cols: int = 256):
+                 cols: int = 256, *, kernel_variant: str | None = None,
+                 interpret: bool | None = None, unroll: int | None = None):
         if n_arrays < 1:
             raise ValueError(f"n_arrays must be >= 1, got {n_arrays}")
         if rows < 1 or cols < 1:
@@ -63,11 +64,18 @@ class ArrayPool:
         self.n_arrays = n_arrays
         self.rows = rows
         self.cols = cols
-        # one uploaded schedule per compiled program, shared by every
-        # launch; the CompiledProgram is pinned in the value so its id
-        # (the key) can never be recycled onto a different program
+        # pool-level execution knobs: per-call kwargs override, None means
+        # the measured backend default (kernels.tap_pass.kernel)
+        self.kernel_variant = kernel_variant
+        self.interpret = interpret
+        self.unroll = unroll
+        # one uploaded schedule per (compiled program, resolved variant),
+        # shared by every launch; the CompiledProgram is pinned in the
+        # value so its id (the key) can never be recycled onto a
+        # different program
         self._schedules: dict[
-            int, tuple[CompiledProgram, tuple[jax.Array, ...]]] = {}
+            tuple[int, str],
+            tuple[CompiledProgram, tuple[jax.Array, ...], str, int]] = {}
         self._max_schedules = 64
 
     def __repr__(self) -> str:
@@ -103,18 +111,25 @@ class ArrayPool:
 
     # -- schedule store -----------------------------------------------------
 
-    def _device_schedule(self, compiled: CompiledProgram
-                         ) -> tuple[jax.Array, ...]:
-        hit = self._schedules.get(id(compiled))
+    def _device_schedule(self, compiled: CompiledProgram,
+                         kernel_variant: str | None = None
+                         ) -> tuple[tuple[jax.Array, ...], str, int]:
+        """Device-resident schedule tensors for the resolved kernel variant
+        (uploaded once per (program, variant)); returns
+        ``(sched, variant, pack)`` ready for ``tap_run_program``."""
+        kernel_variant = (self.kernel_variant if kernel_variant is None
+                          else kernel_variant)
+        host, variant, pack, name = resolve_schedule(compiled,
+                                                     kernel_variant)
+        key = (id(compiled), name)
+        hit = self._schedules.get(key)
         if hit is not None:
-            return hit[1]
-        sched = tuple(jnp.asarray(t) for t in (
-            compiled.cmp_cols, compiled.keys, compiled.key_valid,
-            compiled.hist_flag, compiled.wr_cols, compiled.wr_vals))
+            return hit[1], hit[2], hit[3]
+        sched = tuple(jnp.asarray(t) for t in host)
         while len(self._schedules) >= self._max_schedules:   # FIFO evict
             self._schedules.pop(next(iter(self._schedules)))
-        self._schedules[id(compiled)] = (compiled, sched)
-        return sched
+        self._schedules[key] = (compiled, sched, variant, pack)
+        return sched, variant, pack
 
     # -- cost model ---------------------------------------------------------
 
@@ -134,20 +149,26 @@ class ArrayPool:
     # -- execution ----------------------------------------------------------
 
     def run(self, arr: jax.Array, compiled: CompiledProgram, *,
-            collect_stats: bool = False, interpret: bool = True
+            collect_stats: bool = False, interpret: bool | None = None,
+            kernel_variant: str | None = None, unroll: int | None = None
             ) -> tuple[jax.Array, TracedStats | None]:
         """Stream [rows, cols] digit rows through the pool.
 
         Output and (when ``collect_stats``) accumulated APStats are
-        bit-identical to single-array :func:`~repro.apc.exec.execute`.
+        bit-identical to single-array :func:`~repro.apc.exec.execute` for
+        every kernel variant; ``interpret``/``kernel_variant``/``unroll``
+        default to the pool-level knobs, then the backend defaults.
         """
         n_rows, n_cols = arr.shape
         self.validate(compiled, n_cols=n_cols)
+        interpret = self.interpret if interpret is None else interpret
+        unroll = self.unroll if unroll is None else unroll
         if n_rows == 0:
             empty = jnp.zeros((1, 2 + HIST_BINS), jnp.int32)
             return (jnp.asarray(arr, jnp.int8),
                     TracedStats(empty) if collect_stats else None)
-        sched = self._device_schedule(compiled)
+        sched, variant, pack = self._device_schedule(compiled,
+                                                     kernel_variant)
         arr = jnp.asarray(arr, jnp.int8)
         in_flight: list[tuple[jax.Array, jax.Array | None, int]] = []
         outs: list[jax.Array] = []
@@ -170,7 +191,8 @@ class ArrayPool:
             out, raw = tap_run_program(
                 padded, *sched, jnp.int32(valid), block_rows=self.rows,
                 collect_stats=collect_stats, hist_bins=HIST_BINS,
-                interpret=interpret)
+                interpret=interpret, unroll=unroll, variant=variant,
+                pack=pack)
             in_flight.append((out, raw, valid))
             if len(in_flight) >= 2 * self.n_arrays:
                 oldest = in_flight.pop(0)
@@ -187,12 +209,15 @@ class ArrayPool:
 
 def run_pooled(arr: jax.Array, compiled: CompiledProgram, pool: ArrayPool,
                *, stats: APStats | None = None,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None,
+               kernel_variant: str | None = None,
+               unroll: int | None = None) -> jax.Array:
     """Driver-style front door: pool.run + optional APStats accumulate
     (mirrors :func:`repro.apc.exec.run` for the single-array path).
     ``pool.run`` validates the column budget before any schedule upload."""
     out, traced = pool.run(arr, compiled, collect_stats=stats is not None,
-                           interpret=interpret)
+                           interpret=interpret, kernel_variant=kernel_variant,
+                           unroll=unroll)
     if stats is not None:
         accumulate(stats, traced, compiled, n_rows=arr.shape[0])
     return out
@@ -202,7 +227,9 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
                   pool: ArrayPool | None = None,
                   stats: APStats | None = None,
                   block_rows: int | None = None,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None,
+                  kernel_variant: str | None = None,
+                  unroll: int | None = None) -> jax.Array:
     """ACC = sum_k w_k * x_k through the K-tiled programs, over a pool.
 
     ``x`` [R, K] integer dtype, ``w_ter`` [R, K] in {-1, 0, +1} (device
@@ -232,12 +259,16 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
         if pool is not None:
             out, traced = pool.run(arr, compiled,
                                    collect_stats=stats is not None,
-                                   interpret=interpret)
+                                   interpret=interpret,
+                                   kernel_variant=kernel_variant,
+                                   unroll=unroll)
         else:
             out, traced = execute(arr, compiled,
                                   collect_stats=stats is not None,
                                   block_rows=block_rows,
-                                  interpret=interpret)
+                                  interpret=interpret,
+                                  kernel_variant=kernel_variant,
+                                  unroll=unroll)
         if stats is not None:
             accumulate(stats, traced, compiled, n_rows=R)
         return out

@@ -50,8 +50,11 @@ class DevicePool(ArrayPool):
     """
 
     def __init__(self, mesh=None, *, n_arrays: int = 4, rows: int = 4096,
-                 cols: int = 256):
-        super().__init__(n_arrays=n_arrays, rows=rows, cols=cols)
+                 cols: int = 256, kernel_variant: str | None = None,
+                 interpret: bool | None = None, unroll: int | None = None):
+        super().__init__(n_arrays=n_arrays, rows=rows, cols=cols,
+                         kernel_variant=kernel_variant, interpret=interpret,
+                         unroll=unroll)
         self.mesh = mesh
         if mesh is None:
             self.axes: tuple[str, ...] = ()
@@ -84,7 +87,8 @@ class DevicePool(ArrayPool):
                 "write_cycles": waves * n_write_cycles}
 
     def run(self, arr: jax.Array, compiled: CompiledProgram, *,
-            collect_stats: bool = False, interpret: bool = True
+            collect_stats: bool = False, interpret: bool | None = None,
+            kernel_variant: str | None = None, unroll: int | None = None
             ) -> tuple[jax.Array, TracedStats | None]:
         """Stream [rows, cols] digit rows through the device-spanning bank.
 
@@ -94,14 +98,18 @@ class DevicePool(ArrayPool):
         """
         if self.mesh is None:
             return super().run(arr, compiled, collect_stats=collect_stats,
-                               interpret=interpret)
+                               interpret=interpret,
+                               kernel_variant=kernel_variant, unroll=unroll)
         n_rows, n_cols = arr.shape
         self.validate(compiled, n_cols=n_cols)
+        interpret = self.interpret if interpret is None else interpret
+        unroll = self.unroll if unroll is None else unroll
         if n_rows == 0:
             empty = jnp.zeros((1, 2 + HIST_BINS), jnp.int32)
             return (jnp.asarray(arr, jnp.int8),
                     TracedStats(empty) if collect_stats else None)
-        sched = self._device_schedule(compiled)
+        sched, variant, pack = self._device_schedule(compiled,
+                                                     kernel_variant)
         d = self.n_devices
         # per-device shard: whole blocks of self.rows (kernel grid splits
         # the shard back into per-array blocks); padding rows are masked
@@ -111,7 +119,8 @@ class DevicePool(ArrayPool):
         padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), d * shard_rows)
         out, raw = sharded_program_run(
             padded, sched, self.mesh, self.axes, n_rows, self.rows,
-            collect_stats=collect_stats, interpret=interpret)
+            collect_stats=collect_stats, interpret=interpret,
+            variant=variant, pack=pack, unroll=unroll)
         out = out[:n_rows]
         if collect_stats:
             return out, TracedStats(raw)
@@ -135,9 +144,13 @@ class Runtime:
     graph charges exactly what running each program alone would.
     """
 
-    def __init__(self, pool: ArrayPool, *, interpret: bool = True):
+    def __init__(self, pool: ArrayPool, *, interpret: bool | None = None,
+                 kernel_variant: str | None = None,
+                 unroll: int | None = None):
         self.pool = pool
         self.interpret = interpret
+        self.kernel_variant = kernel_variant
+        self.unroll = unroll
         self.last_report: dict[str, float] | None = None
 
     def __repr__(self) -> str:
@@ -146,6 +159,38 @@ class Runtime:
     @property
     def n_devices(self) -> int:
         return getattr(self.pool, "n_devices", 1)
+
+    def check_knobs(self, *, interpret: bool | None = None,
+                    kernel_variant: str | None = None,
+                    unroll: int | None = None) -> None:
+        """Reject per-call execution knobs the runtime route cannot honor.
+
+        Graph execution always runs with the knobs configured on the
+        Runtime itself; a caller passing a different explicit value would
+        otherwise be silently ignored — raise instead and point at the
+        constructor.  An explicit value that merely restates what an
+        unconfigured (None) Runtime resolves to anyway is compatible —
+        e.g. ``interpret=True`` against a default Runtime on a CPU host,
+        the pre-knob API's documented default.
+        """
+        from ..kernels.tap_pass.kernel import resolve_interpret
+        from .lower import default_kernel_variant
+        checks = (
+            ("interpret", interpret, self.interpret,
+             lambda v: v == resolve_interpret(None)),
+            ("kernel_variant", kernel_variant, self.kernel_variant,
+             lambda v: v == default_kernel_variant()),
+            ("unroll", unroll, self.unroll, lambda v: False),
+        )
+        for name, val, own, matches_default in checks:
+            if val is None or val == own:
+                continue
+            if own is None and matches_default(val):
+                continue
+            raise ValueError(
+                f"{name}={val!r} conflicts with Runtime({name}={own!r}) "
+                f"— the graph route runs with the Runtime's knobs; set "
+                f"it on the Runtime constructor")
 
     def makespan(self, graph: ProgramGraph) -> dict[str, float]:
         """Occupancy-model makespan of ``graph`` on this runtime's bank."""
@@ -188,7 +233,9 @@ class Runtime:
             # the pool's own double buffering spreads blocks over arrays
             out, tr = self.pool.run(arr, node.compiled,
                                     collect_stats=collect,
-                                    interpret=self.interpret)
+                                    interpret=self.interpret,
+                                    kernel_variant=self.kernel_variant,
+                                    unroll=self.unroll)
             results[nid] = node.result(out)
             traced.append((nid, tr))
             done.add(nid)

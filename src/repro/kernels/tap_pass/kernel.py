@@ -1,4 +1,4 @@
-"""Fused TAP LUT-schedule Pallas kernel.
+"""Fused TAP LUT-schedule kernel: pallas + compiled-XLA program executors.
 
 TPU adaptation of the paper's in-memory property: the MvCAM row-block is the
 VMEM-resident tile, the CAM rows map onto the TPU vector lanes, and the whole
@@ -7,10 +7,25 @@ compare/write pass schedule (e.g. all 20 digits x 21 passes of a 20-trit add,
 with exactly ONE HBM read and ONE HBM write per block.
 
 Layout: digits [rows, cols] int8, rows is the parallel axis (grid dim 0),
-cols the operand digit columns (2p+1 for a p-digit add).  The schedule is a
-static Python structure baked into the kernel at trace time — passes become
-fully unrolled VPU compare/select ops, which is what the AP's "apply masked
-key to all rows at once" means on a TPU.
+cols the operand digit columns (2p+1 for a p-digit add).
+
+Two step-body formulations for the whole-program executor:
+
+- ``variant="gather"`` — the original body: per-step dynamic column gathers
+  (``jnp.take``) for the compare and a serial ``dynamic_update_index_in_dim``
+  chain for the writes.  Runs everywhere in interpret mode; lane-hostile on
+  real vector hardware (dynamic cross-lane indexing in the loop body).
+- ``variant="onehot"`` — the AP-native formulation: the compare becomes a
+  one-hot matmul (``block @ onehot(cmp_cols)``, an int8 MXU contraction on
+  TPU) and each write a ``jnp.where(col_mask & tag[:, None], vals, block)``
+  blend over the full row.  No dynamic indexing anywhere, so the body
+  compiles (``interpret=False``): Mosaic on TPU, plain XLA elsewhere.  With
+  ``pack > 1`` each fori_loop iteration replays a whole VLIW group of
+  mutually independent slots (see :class:`repro.apc.lower.PackedProgram`)
+  against the pre-group block and lands all writes in one blend.
+
+Both formulations are bit-identical — digits AND traced counters, including
+the mismatch histogram's saturating top bin (pinned by tests/test_pack.py).
 
 Block shape: (BLOCK_ROWS, cols) with BLOCK_ROWS a multiple of the 8x128 VREG
 tile (default 1024 rows => 1024 x cols int8 in VMEM, ~48 KB for 20-trit adds,
@@ -19,6 +34,7 @@ well inside the ~16 MB VMEM budget, leaving room for double buffering).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +43,43 @@ from jax.experimental import pallas as pl
 from .ref import DONT_CARE, Step
 
 BLOCK_ROWS = 1024
+
+VARIANTS = ("gather", "onehot")
+
+# Measured defaults for the knobs the executors thread through (None = "use
+# the measured default"; REPRO_AP_INTERPRET / REPRO_AP_UNROLL override for
+# CI/bench sweeps).  interpret=None resolves per backend: on TPU the
+# compiled path (Mosaic — the whole point of the one-hot reformulation); on
+# CPU/GPU hosts the pallas interpreter, which under jit stages to the same
+# XLA ops and measured FASTER than the lax.map harness for the gather body
+# (bench_ap_kernel records the matrix).  interpret=False off-TPU runs the
+# jitted-XLA harness below — the compiled path CI keeps green.
+#
+# Unroll (bench_ap_kernel, CPU host, 65k rows): the gather body is cheap
+# per step and profits from unroll=4; the one-hot body is ~n_cols/C times
+# fatter (full-row compares and blends), so deeper unrolls only grow the
+# trace — unroll=2 flat / 1 packed measured fastest.
+DEFAULT_UNROLL = {"gather": 4, "onehot": 2, "onehot_packed": 1}
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("REPRO_AP_INTERPRET")
+    if env is not None:
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
+
+
+def resolve_unroll(unroll: int | None, variant: str, pack: int) -> int:
+    if unroll is None and os.environ.get("REPRO_AP_UNROLL"):
+        unroll = int(os.environ["REPRO_AP_UNROLL"])
+    if unroll is not None:
+        if unroll < 1:
+            raise ValueError(f"unroll must be >= 1, got {unroll}")
+        return int(unroll)
+    key = "onehot_packed" if (variant == "onehot" and pack > 1) else variant
+    return DEFAULT_UNROLL[key]
 
 
 def _tap_kernel(arr_ref, out_ref, *, schedule: tuple[Step, ...]):
@@ -56,52 +109,70 @@ def _tap_kernel(arr_ref, out_ref, *, schedule: tuple[Step, ...]):
     out_ref[...] = block
 
 
-def _tap_program_kernel(n_valid_ref, cmp_cols_ref, keys_ref, key_valid_ref,
-                        hist_flag_ref, wr_cols_ref, wr_vals_ref, arr_ref,
-                        out_ref, *stats_refs, block_rows: int,
-                        collect_stats: bool, hist_bins: int, unroll: int):
-    """Whole-program kernel: lax.fori_loop over a baked schedule tensor.
+# ---------------------------------------------------------------------------
+# Whole-program step body (shared by the pallas kernel and the XLA path)
+# ---------------------------------------------------------------------------
 
-    Unlike :func:`_tap_kernel` (schedule unrolled into the trace — fine for
-    one LUT sweep, hopeless for a 5k-step multiply program), this body traces
-    ONE generic step and loops over the dense schedule tensors, so trace time
-    is O(1) in program length.  Stats are carried through the loop and
-    written once per row-block; rows past ``n_valid_rows`` (block padding)
-    are masked out of both writes and counters.
+def _program_block_body(block, row_ok, sched, *, collect_stats: bool,
+                        hist_bins: int, unroll: int, variant: str,
+                        pack: int):
+    """Replay the packed schedule tensors on one resident row-block.
+
+    ``block`` [rows, cols] int8, ``row_ok`` [rows] bool (padding rows masked
+    out of writes and counters), ``sched`` the 6 dense schedule tensors.
+    Returns ``(out_block, sets, resets, hist)`` — the counters are zeros
+    when ``collect_stats`` is off (no extra compute on that path).
     """
-    i = pl.program_id(0)
-    block = arr_ref[...]                              # [block_rows, cols] int8
-    rows = block.shape[0]
-    row_ok = (i * block_rows
-              + jax.lax.broadcasted_iota(jnp.int32, (rows,), 0)
-              ) < n_valid_ref[0]
-    cmp_cols = cmp_cols_ref[...]                      # (S, C) int32, -1 pad
-    keys = keys_ref[...]                              # (S, K, C) int8
-    key_valid = key_valid_ref[...]                    # (S, K) bool
-    hist_flag = hist_flag_ref[...]                    # (S,) bool
-    wr_cols = wr_cols_ref[...]                        # (S, W) int32, -1 pad
-    wr_vals = wr_vals_ref[...]                        # (S, W) int8
+    cmp_cols, keys, key_valid, hist_flag, wr_cols, wr_vals = sched
+    rows, n_cols = block.shape
     n_steps, n_w = wr_cols.shape
-
     n_c = cmp_cols.shape[1]
+    n_k = keys.shape[1]
+    if n_steps % pack:
+        raise ValueError(f"{n_steps} schedule slots not a multiple of "
+                         f"pack={pack}")
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_cols), 1)
 
-    def step(s, carry):
-        block, sets, resets, hist = carry
-        cc = cmp_cols[s]                              # (C,)
-        c_ok = cc >= 0
-        sub = jnp.take(block, jnp.maximum(cc, 0), axis=1)   # (rows, C) int8
-        key_s = keys[s]                               # (K, C) int8
-        miss = (sub[:, None, :] != key_s[None, :, :]) & \
-               (sub[:, None, :] != DONT_CARE) & \
-               c_ok[None, None, :]                    # (rows, K, C)
-        kv = key_valid[s]                             # (K,)
+    def slot_compare(blk, s, hist):
+        """Tag vector (+ histogram update) for slot ``s`` vs ``blk``."""
+        cc = cmp_cols[s]                              # (C,) int32, -1 pad
+        kv = key_valid[s]                             # (K,) bool
+        if variant == "gather":
+            sub = jnp.take(blk, jnp.maximum(cc, 0), axis=1)     # (rows, C)
+            key_s = keys[s]                           # (K, C)
+            c_ok = cc >= 0
+            miss = (sub[:, None, :] != key_s[None, :, :]) & \
+                   (sub[:, None, :] != DONT_CARE) & \
+                   c_ok[None, None, :]                # (rows, K, C)
+        else:
+            # one-hot formulation: expand the compare columns + key into a
+            # full-row mask/value plane (tiny C x n_cols one-hot ops, pad
+            # cc=-1 rows all-zero; compare columns are distinct, enforced
+            # by resolve_schedule) — the compare itself is then a masked
+            # equality reduction over whole rows, the AP's "broadcast key
+            # to every cell" with zero dynamic indexing
+            oh = (cc[:, None] == col_iota).astype(jnp.int8)     # (C, n_cols)
+            cmp_mask = oh.any(axis=0)                           # (n_cols,)
+            key_vals = jax.lax.dot_general(                     # (K, n_cols)
+                keys[s], oh, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int8)
+            if n_k == 1:                  # non-blocked schedules: keep the
+                miss = (blk != key_vals) & \
+                       (blk != DONT_CARE) & \
+                       cmp_mask[None, :]  # temporaries 2-D ((rows, n_cols))
+            else:
+                miss = (blk[:, None, :] != key_vals[None, :, :]) & \
+                       (blk[:, None, :] != DONT_CARE) & \
+                       cmp_mask[None, None, :]        # (rows, K, n_cols)
+            if miss.ndim == 2:
+                miss = miss[:, None, :]
         if collect_stats:
             # mismatch count doubles as the matcher: full match <=> mm == 0
-            mm = jnp.sum(miss, axis=2, dtype=jnp.int32)       # (rows, K)
+            mm = jnp.sum(miss, axis=2, dtype=jnp.int32)         # (rows, K)
             tag = ((mm == 0) & kv[None, :]).any(axis=1)
             counted = kv[None, :] & hist_flag[s] & row_ok[:, None]
-            # mm <= #compare columns, so higher bins are statically zero;
-            # when mm can exceed the bin range the top bin saturates
+            # mm <= #compare columns (n_c), so higher bins are statically
+            # zero; when mm can exceed the bin range the top bin saturates
             # (>= hist_bins-1 mismatches) instead of dropping mass
             for b in range(min(hist_bins, n_c + 1)):
                 in_bin = ((mm >= b) if b == hist_bins - 1 < n_c
@@ -111,6 +182,11 @@ def _tap_program_kernel(n_valid_ref, cmp_cols_ref, keys_ref, key_valid_ref,
         else:
             tag = (~miss.any(axis=2) & kv[None, :]).any(axis=1)
         tag = jnp.where(kv.any(), tag, True) & row_ok
+        return tag, hist
+
+    def step_gather(s, carry):
+        block, sets, resets, hist = carry
+        tag, hist = slot_compare(block, s, hist)
         for w in range(n_w):
             col = jnp.maximum(wr_cols[s, w], 0)
             w_ok = wr_cols[s, w] >= 0
@@ -126,42 +202,165 @@ def _tap_program_kernel(n_valid_ref, cmp_cols_ref, keys_ref, key_valid_ref,
                 block, jnp.where(changed, v, old), col, axis=1)
         return block, sets, resets, hist
 
+    def step_onehot(g, carry):
+        block, sets, resets, hist = carry
+        # all slots of the group compare against (and count set/reset deltas
+        # vs) the pre-group block; the pack pass guarantees slots are
+        # mutually independent, so the single combined blend below equals
+        # serial application slot by slot — bit-exactly, counters included
+        apply = jnp.zeros((rows, n_cols), jnp.bool_)
+        gval = jnp.zeros((n_cols,), jnp.int8)
+        for p in range(pack):
+            s = g * pack + p
+            tag, hist = slot_compare(block, s, hist)
+            w_oh = wr_cols[s][:, None] == col_iota    # (W, n_cols); -1 pads
+            wmask = w_oh.any(axis=0)                  # never match the iota
+            wval = jnp.sum(w_oh * wr_vals[s][:, None], axis=0,
+                           dtype=jnp.int32).astype(jnp.int8)
+            slot_apply = tag[:, None] & wmask[None, :]
+            if collect_stats:
+                changed = slot_apply & (block != wval[None, :])
+                sets = sets + jnp.sum(changed, dtype=jnp.int32)
+                resets = resets + jnp.sum(changed & (block != DONT_CARE),
+                                          dtype=jnp.int32)
+            apply = apply | slot_apply
+            gval = gval + wval                        # disjoint write columns
+        block = jnp.where(apply, gval[None, :], block)
+        return block, sets, resets, hist
+
     zero = jnp.zeros((), jnp.int32)
     init = (block, zero, zero, jnp.zeros((hist_bins,), jnp.int32))
-    block, sets, resets, hist = jax.lax.fori_loop(0, n_steps, step, init,
-                                                  unroll=unroll)
+    step = step_gather if variant == "gather" else step_onehot
+    return jax.lax.fori_loop(0, n_steps // pack, step, init, unroll=unroll)
+
+
+def _tap_program_kernel(n_valid_ref, cmp_cols_ref, keys_ref, key_valid_ref,
+                        hist_flag_ref, wr_cols_ref, wr_vals_ref, arr_ref,
+                        out_ref, *stats_refs, block_rows: int,
+                        collect_stats: bool, hist_bins: int, unroll: int,
+                        variant: str, pack: int):
+    """Pallas wrapper: lax.fori_loop over a baked schedule tensor.
+
+    Unlike :func:`_tap_kernel` (schedule unrolled into the trace — fine for
+    one LUT sweep, hopeless for a 5k-step multiply program), this body traces
+    ONE generic step and loops over the dense schedule tensors, so trace time
+    is O(1) in program length.  Stats are carried through the loop and
+    written once per row-block; rows past ``n_valid_rows`` (block padding)
+    are masked out of both writes and counters.
+    """
+    i = pl.program_id(0)
+    block = arr_ref[...]                              # [block_rows, cols] int8
+    rows = block.shape[0]
+    row_ok = (i * block_rows
+              + jax.lax.broadcasted_iota(jnp.int32, (rows,), 0)
+              ) < n_valid_ref[0]
+    sched = tuple(r[...] for r in (cmp_cols_ref, keys_ref, key_valid_ref,
+                                   hist_flag_ref, wr_cols_ref, wr_vals_ref))
+    block, sets, resets, hist = _program_block_body(
+        block, row_ok, sched, collect_stats=collect_stats,
+        hist_bins=hist_bins, unroll=unroll, variant=variant, pack=pack)
     out_ref[...] = block
     if collect_stats:
         stats_refs[0][...] = jnp.concatenate(
             [sets[None], resets[None], hist])[None, :]
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "block_rows", "collect_stats", "hist_bins", "interpret", "unroll"))
+def _tap_program_xla(padded, sched, n_valid, *, block_rows: int,
+                     collect_stats: bool, hist_bins: int, unroll: int,
+                     variant: str, pack: int):
+    """Compiled-XLA path: the same step body vmapped over row-blocks.
+
+    Used when ``interpret=False`` on a non-TPU backend, where pallas has no
+    compiled lowering — the one-hot body is ordinary static vector algebra,
+    so plain jit gives the compiled semantics (and per-block counter layout)
+    the TPU kernel has, bit-identically.
+    """
+    rows, cols = padded.shape
+    grid = rows // block_rows
+
+    def per_block(args):
+        i, blk = args
+        row_ok = (i * block_rows
+                  + jnp.arange(block_rows, dtype=jnp.int32)) < n_valid[0]
+        out, sets, resets, hist = _program_block_body(
+            blk, row_ok, sched, collect_stats=collect_stats,
+            hist_bins=hist_bins, unroll=unroll, variant=variant, pack=pack)
+        return out, jnp.concatenate([sets[None], resets[None], hist])
+
+    # sequential lax.map over row-blocks, mirroring the pallas grid — vmap
+    # batches the gather body's dynamic updates into scatter HLO that XLA
+    # CPU lowers ~2x slower than the streamed per-block loop
+    out, counts = jax.lax.map(
+        per_block, (jnp.arange(grid, dtype=jnp.int32),
+                    padded.reshape(grid, block_rows, cols)))
+    return out.reshape(rows, cols), counts
+
+
 def tap_run_program(arr: jax.Array, cmp_cols: jax.Array, keys: jax.Array,
                     key_valid: jax.Array, hist_flag: jax.Array,
                     wr_cols: jax.Array, wr_vals: jax.Array,
                     n_valid_rows: jax.Array, *,
                     block_rows: int = BLOCK_ROWS,
                     collect_stats: bool = False, hist_bins: int = 8,
-                    interpret: bool = True, unroll: int = 4):
-    """Run a whole packed program: one pallas_call, grid over row-blocks.
+                    interpret: bool | None = None, unroll: int | None = None,
+                    variant: str = "gather", pack: int = 1):
+    """Run a whole packed program: one launch, grid over row-blocks.
 
     Returns ``out`` (same shape as ``arr``) and, when ``collect_stats``, a
     per-grid-block (grid, 2 + hist_bins) int32 counter tensor laid out as
     [sets, resets, hist[0..hist_bins)] — summed over grid by the caller
     (still in-graph).  The schedule tensors are runtime args, so one
     compiled kernel serves every program with the same packed shape.
+
+    ``variant`` selects the step-body formulation (see module docstring);
+    ``pack`` > 1 (one-hot only) replays VLIW groups of that many slots per
+    loop iteration — the schedule tensors must be group-major with
+    ``n_slots % pack == 0`` (:meth:`repro.apc.lower.CompiledProgram.packed`
+    produces them).  ``interpret=None`` resolves per backend (see
+    :func:`resolve_interpret`); ``interpret=False`` off-TPU runs the jitted
+    XLA harness — same body, same per-block counter layout, bit-identical.
     """
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
+    if pack < 1:
+        raise ValueError(f"pack must be >= 1, got {pack}")
+    if variant == "gather" and pack != 1:
+        raise ValueError("the gather body applies writes serially; VLIW "
+                         "packing requires variant='onehot'")
+    # env-default resolution happens OUT here, before the jit boundary —
+    # inside it the resolved value would be baked into the cache entry
+    # keyed on the None static and never re-read on cache hits
+    return _tap_run_program_jit(
+        arr, cmp_cols, keys, key_valid, hist_flag, wr_cols, wr_vals,
+        n_valid_rows, block_rows=block_rows, collect_stats=collect_stats,
+        hist_bins=hist_bins, interpret=resolve_interpret(interpret),
+        unroll=resolve_unroll(unroll, variant, pack), variant=variant,
+        pack=pack)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_rows", "collect_stats", "hist_bins", "interpret", "unroll",
+    "variant", "pack"))
+def _tap_run_program_jit(arr, cmp_cols, keys, key_valid, hist_flag,
+                         wr_cols, wr_vals, n_valid_rows, *, block_rows: int,
+                         collect_stats: bool, hist_bins: int,
+                         interpret: bool, unroll: int, variant: str,
+                         pack: int):
     rows, cols = arr.shape
     if rows % block_rows:
         raise ValueError(f"rows={rows} not a multiple of {block_rows}")
     grid = (rows // block_rows,)
     n_valid = jnp.asarray(n_valid_rows, jnp.int32).reshape((1,))
+    body_kw = dict(block_rows=block_rows, collect_stats=collect_stats,
+                   hist_bins=hist_bins, unroll=unroll, variant=variant,
+                   pack=pack)
+    if not interpret and jax.default_backend() != "tpu":
+        sched = (cmp_cols, keys, key_valid, hist_flag, wr_cols, wr_vals)
+        out, counts = _tap_program_xla(jnp.asarray(arr, jnp.int8), sched,
+                                       n_valid, **body_kw)
+        return out, (counts if collect_stats else None)
     full = lambda t: pl.BlockSpec(t.shape, lambda i: (0,) * t.ndim)
-    kernel = functools.partial(
-        _tap_program_kernel, block_rows=block_rows,
-        collect_stats=collect_stats, hist_bins=hist_bins, unroll=unroll)
+    kernel = functools.partial(_tap_program_kernel, **body_kw)
     in_specs = [full(n_valid), full(cmp_cols), full(keys), full(key_valid),
                 full(hist_flag), full(wr_cols), full(wr_vals),
                 pl.BlockSpec((block_rows, cols), lambda i: (i, 0))]

@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.lut import LUT
-from .kernel import BLOCK_ROWS, tap_apply_schedule, tap_run_program
+from .kernel import (BLOCK_ROWS, resolve_interpret, tap_apply_schedule,
+                     tap_run_program)
 from .ref import ripple_add_schedule, schedule_from_lut
 
 # Schedules longer than this run through the packed fori_loop program kernel
@@ -27,36 +28,51 @@ def _pad_rows(arr: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
 
 
 def _run_schedule(arr: jax.Array, sched, block_rows: int,
-                  interpret: bool) -> jax.Array:
+                  interpret: bool | None,
+                  kernel_variant: str | None = None) -> jax.Array:
     """Dispatch a flat schedule to the unrolled or fori_loop kernel."""
     padded, rows = _pad_rows(arr, block_rows)
-    if len(sched) <= UNROLL_STEP_LIMIT:
+    off_tpu = jax.default_backend() != "tpu"
+    # The unrolled pallas kernel has no compiled lowering off-TPU.  An
+    # env/backend-RESOLVED interpret=False (the REPRO_AP_INTERPRET=0
+    # lever) quietly stays on the interpreter there — the unrolled body is
+    # static ops either way — but an EXPLICIT interpret=False is honored
+    # by routing the short schedule through the program kernel, whose
+    # jitted-XLA harness is the compiled path on hosts.
+    if len(sched) <= UNROLL_STEP_LIMIT and not (interpret is False
+                                                and off_tpu):
+        interp = resolve_interpret(interpret)
+        if off_tpu:
+            interp = True
         out = tap_apply_schedule(padded, sched, block_rows=block_rows,
-                                 interpret=interpret)
+                                 interpret=interp)
         return out[:rows]
-    from ...apc.lower import Step, _compile_steps       # lazy: import cycle
+    from ...apc.lower import (Step, _compile_steps,     # lazy: import cycle
+                              resolve_schedule)
     compiled = _compile_steps(tuple(
         Step(keys=k, compare_cols=c, write_cols=w, write_vals=v,
              in_hist=bool(k)) for k, c, w, v in sched))
+    tensors, variant, pack, _ = resolve_schedule(compiled, kernel_variant)
     out, _ = tap_run_program(
-        padded, compiled.cmp_cols, compiled.keys, compiled.key_valid,
-        compiled.hist_flag, compiled.wr_cols, compiled.wr_vals,
-        jnp.int32(rows), block_rows=block_rows, interpret=interpret)
+        padded, *tensors, jnp.int32(rows), block_rows=block_rows,
+        interpret=interpret, variant=variant, pack=pack)
     return out[:rows]
 
 
 def tap_apply_lut(arr: jax.Array, lut: LUT, col_map: tuple[int, ...],
                   block_rows: int = BLOCK_ROWS,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None,
+                  kernel_variant: str | None = None) -> jax.Array:
     """One LUT application (single digit position) on the kernel path."""
     sched = schedule_from_lut(lut, col_map)
-    return _run_schedule(arr, sched, block_rows, interpret)
+    return _run_schedule(arr, sched, block_rows, interpret, kernel_variant)
 
 
 def tap_ripple_add(arr: jax.Array, lut: LUT, width: int, carry_col: int,
                    a_base: int = 0, b_base: int | None = None,
                    block_rows: int = BLOCK_ROWS,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool | None = None,
+                   kernel_variant: str | None = None) -> jax.Array:
     """Fused p-digit in-place add: B <- A + B in ONE kernel launch.
 
     This is the flagship fusion: a 20-trit non-blocked add is 441 compare +
@@ -66,7 +82,7 @@ def tap_ripple_add(arr: jax.Array, lut: LUT, width: int, carry_col: int,
     ``UNROLL_STEP_LIMIT``) so trace time stays O(1) in width.
     """
     sched = ripple_add_schedule(lut, width, carry_col, a_base, b_base)
-    return _run_schedule(arr, sched, block_rows, interpret)
+    return _run_schedule(arr, sched, block_rows, interpret, kernel_variant)
 
 
 def hbm_traffic_model(n_rows: int, n_cols: int, lut: LUT, width: int

@@ -88,7 +88,9 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
                       k_tile: int | None = None,
                       stats=None, block_rows: int | None = None,
                       blocked: bool = False,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None,
+                      kernel_variant: str | None = None,
+                      unroll: int | None = None) -> jax.Array:
     """y[M, N] = (x @ unpack(packed)) * scale on the AP program executor.
 
     ``x`` [M, K] integer-valued; ``packed``/``scale`` as produced by
@@ -107,7 +109,11 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
     (possibly device-spanning) bank — same digits, same counters, plus the
     graph makespan in ``runtime.last_report``; ``k_tile`` alone runs the
     tiled programs on the single-array executor (the tiled-vs-untiled
-    oracle); ``mesh`` shards the M*N row axis.  Bit-exact vs
+    oracle); ``mesh`` shards the M*N row axis.  ``kernel_variant`` /
+    ``interpret`` / ``unroll`` pick the program-kernel formulation
+    (gather / one-hot / one-hot+packed, interpreted or compiled; see
+    :mod:`repro.apc.exec`) and default to the measured backend best —
+    every combination is bit-exact.  Bit-exact vs
     :func:`~repro.kernels.ternary_matmul.ref.ternary_matmul_ref` on every
     route because the integer accumulator converts to float32 exactly and
     the final scale-multiply is the same float32 op.
@@ -140,11 +146,8 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
         if block_rows is not None:
             raise ValueError("block_rows only applies without runtime=; "
                              "the runtime pool's own rows govern blocks")
-        if interpret != runtime.interpret:
-            raise ValueError(
-                f"interpret={interpret} conflicts with "
-                f"Runtime(interpret={runtime.interpret}); set it on the "
-                f"Runtime")
+        runtime.check_knobs(interpret=interpret,
+                            kernel_variant=kernel_variant, unroll=unroll)
         max_cols = runtime.pool.cols
         kt = k_tile if k_tile is not None else default_k_tile(max_cols,
                                                               width)
@@ -164,12 +167,14 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
                                       blocked=blocked, max_cols=max_cols)
         acc = apc.run_mac_tiled(x_rows, w_rows, tiled, pool=pool,
                                 stats=stats, block_rows=block_rows,
-                                interpret=interpret)
+                                interpret=interpret,
+                                kernel_variant=kernel_variant, unroll=unroll)
     else:
         compiled = apc.compile_mac(radix, kp, width, blocked=blocked)
         arr = apc.encode_mac_rows_jnp(x_rows, w_rows, radix, width)
         out = apc.run(arr, compiled, stats=stats, mesh=mesh,
-                      block_rows=block_rows, interpret=interpret)
+                      block_rows=block_rows, interpret=interpret,
+                      kernel_variant=kernel_variant, unroll=unroll)
         acc = apc.decode_mac_acc_jnp(out, radix, kp, width)        # [M*N]
     y = (acc.reshape(m, n).astype(jnp.float32)
          * jnp.asarray(scale, jnp.float32)[None, :])
