@@ -423,6 +423,76 @@ def bench_ap_runtime(g_programs: int = 3, m: int = 6, k: int = 48,
     return results
 
 
+def bench_trace_overhead(fn: str = "add", radix: int = 3, width: int = 20,
+                         rows: int = 16384, n_timing: int = 5,
+                         json_path: str | None = None) -> dict:
+    """Telemetry cost on the ap_kernel workload ("trace_overhead" row).
+
+    Times the same compiled-program replay three ways: spans hard-off
+    (``trace.disabled()`` — the REPRO_AP_TRACE=0 production path), spans
+    recording into an active :class:`~repro.apc.trace.Tracer`, and the
+    per-call cost of a no-op span front door in isolation.  The off path
+    pays only a ContextVar read + shared-null-span return per instrumented
+    call, so ``overhead_off_pct`` should sit inside timing noise (< 2%);
+    ``overhead_traced_pct`` prices actually keeping the timeline.
+    """
+    from repro.apc import trace as aptrace
+    compiled = apc.compile_named(fn, radix, width)
+    rng = np.random.default_rng(7)
+    arr = _encode_named(fn, radix, width, rows, rng)
+
+    def run():
+        out, _ = apc.execute(arr, compiled, collect_stats=False)
+        return jax.block_until_ready(out)
+
+    def timed(n):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            run()
+        return (time.perf_counter() - t0) / n * 1e6
+
+    with aptrace.disabled():
+        run()                                  # compile once, off-path
+        off_a = timed(n_timing)
+    with aptrace.tracing(aptrace.Tracer()):
+        traced_us = timed(n_timing)
+    with aptrace.disabled():                   # interleave: drift control
+        off_b = timed(n_timing)
+    off_us = min(off_a, off_b)
+
+    n_calls = 100_000
+    with aptrace.disabled():
+        t0 = time.perf_counter()
+        for _ in range(n_calls):
+            with aptrace.span("x", cat="bench"):
+                pass
+        noop_ns = (time.perf_counter() - t0) / n_calls * 1e9
+
+    row = {"bench": "trace_overhead", "op": fn, "radix": radix,
+           "width": width, "rows": rows, "n_steps": compiled.n_steps,
+           "untraced_us": round(off_us), "untraced_runs_us":
+               [round(off_a), round(off_b)],
+           "traced_us": round(traced_us),
+           "overhead_off_pct": round(100 * (max(off_a, off_b) / off_us - 1),
+                                     2),
+           "overhead_traced_pct": round(100 * (traced_us / off_us - 1), 2),
+           "noop_span_ns": round(noop_ns)}
+    print(f"trace_overhead_{fn}{radix}x{width}_{rows},"
+          f"off={row['untraced_us']}us,traced={row['traced_us']}us,"
+          f"traced_overhead={row['overhead_traced_pct']}%,"
+          f"noop_span={row['noop_span_ns']}ns")
+    if json_path is not None and os.path.exists(json_path):
+        # read-modify-write: refresh just this row, keep the slow
+        # trajectories from the last full run
+        with open(json_path) as f:
+            doc = json.load(f)
+        doc["trace_overhead"] = row
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"trace_overhead row -> {json_path}")
+    return row
+
+
 def main():
     import argparse
     p = argparse.ArgumentParser()
@@ -443,11 +513,12 @@ def main():
     n_dev = len(jax.devices())
     runtime_rows = bench_ap_runtime(
         n_devices_list=(1,) if n_dev == 1 else (1, n_dev))
+    trace_row = bench_trace_overhead()
     with open(args.json, "w") as f:
         json.dump({"bench": "apc_vs_replay", "results": apc_rows,
                    "ap_kernel": kernel_rows, "ap_matmul": matmul_rows,
-                   "ap_pool": pool_rows, "ap_runtime": runtime_rows}, f,
-                  indent=2)
+                   "ap_pool": pool_rows, "ap_runtime": runtime_rows,
+                   "trace_overhead": trace_row}, f, indent=2)
     print(f"apc bench JSON -> {args.json}")
 
 

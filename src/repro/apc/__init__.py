@@ -80,8 +80,9 @@ or via the drivers: ``repro.core.ap.ripple_add(..., engine="apc")``.
 """
 from . import exec as exec  # noqa: PLC0414 — re-export the module
 from . import (caches as caches_mod, graph as graph_mod, ir,
-               layers as layers_mod, lower, mac, pool as pool_mod,
-               runtime as runtime_mod, stats)
+               layers as layers_mod, lower, mac, metrics as metrics_mod,
+               pool as pool_mod, runtime as runtime_mod, stats,
+               trace as trace_mod)
 from .caches import cache_stats, clear_compile_caches
 from .exec import execute, execute_sharded, run
 from .graph import (CARRIED, FoldStage, GraphNode, ProgramGraph,
@@ -102,12 +103,18 @@ from .mac import (TiledMac, compile_mac, compile_mac_reduce,
                   decode_signed_digits_jnp, encode_mac_rows,
                   encode_mac_rows_jnp, mac_acc_width, mac_layout,
                   mac_program, mac_reduce_program, matmul_mac_rows)
+from .metrics import MetricsRegistry, get_registry
 from .pool import ArrayPool, run_mac_tiled, run_pooled
 from .stats import TracedStats, accumulate, to_ap_stats
+from .trace import (Tracer, current_tracer, global_tracer,
+                    reset_global_tracer, tracing, validate_chrome_trace)
 
 __all__ = [
     "caches_mod", "exec", "graph_mod", "ir", "layers_mod", "lower", "mac",
-    "pool_mod", "runtime_mod", "stats",
+    "metrics_mod", "pool_mod", "runtime_mod", "stats", "trace_mod",
+    "MetricsRegistry", "get_registry",
+    "Tracer", "current_tracer", "global_tracer", "reset_global_tracer",
+    "tracing", "validate_chrome_trace",
     "cache_stats", "clear_compile_caches",
     "execute", "execute_sharded", "run",
     "CARRIED", "FoldStage", "GraphNode", "ProgramGraph", "fold_stage_input",

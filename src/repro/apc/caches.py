@@ -23,10 +23,10 @@ def registry() -> dict:
         "lut_nonblocked": nonblocked._build_lut_nonblocked_cached,
         "lut_blocked": blocked._build_lut_blocked_cached,
         "compile_steps": lower._compile_steps,
-        "compile_named": lower.compile_named,
-        "compile_mac": mac.compile_mac,
-        "compile_mac_reduce": mac.compile_mac_reduce,
-        "compile_mac_tiled": mac.compile_mac_tiled,
+        "compile_named": lower._compile_named_cached,
+        "compile_mac": mac._compile_mac_cached,
+        "compile_mac_reduce": mac._compile_mac_reduce_cached,
+        "compile_mac_tiled": mac._compile_mac_tiled_cached,
     }
 
 

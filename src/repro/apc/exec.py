@@ -41,6 +41,7 @@ from ..core.ap import APStats
 from ..kernels.tap_pass.kernel import tap_run_program
 from ..kernels.tap_pass.ops import _pad_rows
 from ..launch.mesh import data_axes
+from . import trace
 from .ir import Program
 from .lower import CompiledProgram, compile_program, resolve_schedule
 from .stats import HIST_BINS, TracedStats, accumulate
@@ -71,10 +72,12 @@ def execute(arr: jax.Array, compiled: CompiledProgram, *,
     sched, variant, pack, _ = resolve_schedule(compiled, kernel_variant)
     block_rows = block_rows or min(BLOCK_ROWS, max(8, rows))
     padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), block_rows)
-    out, raw = tap_run_program(
-        padded, *sched, jnp.int32(rows), block_rows=block_rows,
-        collect_stats=collect_stats, hist_bins=HIST_BINS,
-        interpret=interpret, unroll=unroll, variant=variant, pack=pack)
+    with trace.span("execute", cat="execute", rows=rows,
+                    steps=compiled.n_steps, variant=variant, pack=pack):
+        out, raw = tap_run_program(
+            padded, *sched, jnp.int32(rows), block_rows=block_rows,
+            collect_stats=collect_stats, hist_bins=HIST_BINS,
+            interpret=interpret, unroll=unroll, variant=variant, pack=pack)
     out = out[:rows]
     return out, (TracedStats(block_counts=raw) if collect_stats else None)
 
@@ -140,10 +143,14 @@ def execute_sharded(arr: jax.Array, compiled: CompiledProgram, mesh, *,
                                    max(8, -(-rows // n_shards)))
     padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), n_shards * block_rows)
     sched, variant, pack, _ = resolve_schedule(compiled, kernel_variant)
-    out, raw = sharded_program_run(padded, sched, mesh, axes, rows,
-                                   block_rows, collect_stats=collect_stats,
-                                   interpret=interpret, variant=variant,
-                                   pack=pack, unroll=unroll)
+    with trace.span("execute_sharded", cat="execute", rows=rows,
+                    steps=compiled.n_steps, variant=variant, pack=pack,
+                    shards=n_shards):
+        out, raw = sharded_program_run(padded, sched, mesh, axes, rows,
+                                       block_rows,
+                                       collect_stats=collect_stats,
+                                       interpret=interpret, variant=variant,
+                                       pack=pack, unroll=unroll)
     out = out[:rows]
     if collect_stats:
         return out, TracedStats(raw)

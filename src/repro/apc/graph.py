@@ -224,8 +224,8 @@ class ProgramGraph:
 # ---------------------------------------------------------------------------
 
 def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
-                   rows_per_array: int, n_devices: int = 1
-                   ) -> dict[str, float]:
+                   rows_per_array: int, n_devices: int = 1,
+                   record: list | None = None) -> dict[str, float]:
     """List-schedule the graph onto ``n_arrays * n_devices`` arrays.
 
     Each node expands into ``ceil(rows / rows_per_array)`` block-tasks of
@@ -242,6 +242,12 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
     ``makespan <= sequential`` by construction, and strictly below it
     whenever a drain would leave arrays idle (independent programs in
     flight, or a tail wave that does not fill the bank).
+
+    ``record`` (a list, appended in place) captures the schedule itself:
+    one ``{node, array, blocks, start_ns, end_ns, start_cycles,
+    end_cycles}`` entry per (node, array) assignment — what the tracer
+    renders as the per-device/array model-time timeline
+    (:meth:`repro.apc.trace.Tracer.model_span`).
     """
     if n_arrays < 1 or n_devices < 1 or rows_per_array < 1:
         raise ValueError(
@@ -254,7 +260,7 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
     finish_ns: list[float] = []
     seq = 0
     seq_ns = 0.0
-    for node in graph.nodes:
+    for nid, node in enumerate(graph.nodes):
         ready = max((finish[d] for d in node.deps), default=0)
         ready_ns = max((finish_ns[d] for d in node.deps), default=0.0)
         blocks = max(1, math.ceil(node.rows / rows_per_array))
@@ -264,13 +270,20 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
             nb = blocks // total + (1 if j < blocks % total else 0)
             if nb == 0:
                 break
-            free[i] = max(free[i], ready) + nb * node.cycles
+            start = max(free[i], ready)
+            start_ns = max(free_ns[i], ready_ns)
+            free[i] = start + nb * node.cycles
             end = max(end, free[i])
             # ns rides the SAME block assignment (Table-XI-timed rendering
             # of the cycle schedule), so makespan_ns <= sequential_ns by
             # the identical per-node wave bound
-            free_ns[i] = max(free_ns[i], ready_ns) + nb * node.cycles_ns
+            free_ns[i] = start_ns + nb * node.cycles_ns
             end_ns = max(end_ns, free_ns[i])
+            if record is not None:
+                record.append({"node": nid, "array": i, "blocks": nb,
+                               "start_ns": start_ns, "end_ns": free_ns[i],
+                               "start_cycles": start,
+                               "end_cycles": free[i]})
         finish.append(end)
         finish_ns.append(end_ns)
         waves = math.ceil(math.ceil(blocks / n_devices) / n_arrays)

@@ -39,6 +39,7 @@ import numpy as np
 from ..core.ap import APStats
 from ..core.energy import energy_from_stats
 from ..kernels.ternary_matmul.ref import quantize_ternary, unpack_ternary
+from . import trace
 from .graph import ProgramGraph
 from .mac import (compile_mac_tiled, decode_signed_digits_jnp,
                   mac_acc_width, matmul_mac_rows)
@@ -210,7 +211,9 @@ class APServeContext:
     # -- execution + aggregation --------------------------------------------
 
     def run_graph(self, graph: ProgramGraph):
-        res = self.runtime.run_graph(graph, stats=self.stats)
+        with trace.span("serve.graph", cat="serve", n_nodes=len(graph),
+                        graph_index=self.n_graphs):
+            res = self.runtime.run_graph(graph, stats=self.stats)
         self.makespan_cycles += res.report["makespan_cycles"]
         self.sequential_cycles += res.report["sequential_cycles"]
         self.makespan_ns += res.report["makespan_ns"]

@@ -38,6 +38,7 @@ from ..core import truth_tables as tt
 from ..core.blocked import build_lut_blocked
 from ..core.lut import LUT
 from ..core.nonblocked import build_lut_nonblocked
+from . import trace
 from .ir import (ApplyLUT, Col, CompareWrite, ForDigit, Op, Program, SetCol,
                  ZeroCol, digit, resolve_col)
 
@@ -359,7 +360,9 @@ def _compile_steps(steps: tuple[Step, ...]) -> CompiledProgram:
 
 def compile_program(program: Program) -> CompiledProgram:
     """Lower + pack, cached on the flattened schedule (Step tuples hash)."""
-    return _compile_steps(lower(program))
+    steps = lower(program)
+    return trace.traced_compile("compile_steps", _compile_steps, steps,
+                                _label=f"steps[{len(steps)}]")
 
 
 # ---------------------------------------------------------------------------
@@ -456,9 +459,21 @@ def elementwise_program(lut2: LUT, width: int, a_base: int = 0,
 # Whole-program cache keyed on (fn, radix, width)
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=128)
 def compile_named(fn: str, radix: int, width: int, *, blocked: bool = False
                   ) -> CompiledProgram:
+    """Compile a standard multi-digit program by name, cached (with
+    compile-span + cache hit/miss telemetry; see :mod:`repro.apc.trace`).
+
+    See :func:`_compile_named_cached` for the program layouts.
+    """
+    return trace.traced_compile(
+        "compile_named", _compile_named_cached, fn, radix, width,
+        blocked=blocked, _label=f"{fn}:r{radix}:w{width}")
+
+
+@functools.lru_cache(maxsize=128)
+def _compile_named_cached(fn: str, radix: int, width: int, *,
+                          blocked: bool = False) -> CompiledProgram:
     """Compile a standard multi-digit program by name, cached.
 
     Layouts (little-endian digit columns, matching core/ap.py drivers):

@@ -56,6 +56,7 @@ from ..core import truth_tables as tt
 from ..core.blocked import build_lut_blocked
 from ..core.lut import LUT
 from ..core.nonblocked import build_lut_nonblocked
+from . import trace
 from .ir import ApplyLUT, ForDigit, Op, Program, SetCol, ZeroCol, digit
 from .lower import CompiledProgram, compile_program
 
@@ -124,10 +125,17 @@ def mac_program(lut_add: LUT, lut_rsub: LUT, K: int, width: int,
     return tuple(prog)
 
 
-@functools.lru_cache(maxsize=64)
 def compile_mac(radix: int, K: int, width: int, *, blocked: bool = False
                 ) -> CompiledProgram:
     """Compile the (radix, K, width) MAC program, cached per process."""
+    return trace.traced_compile(
+        "compile_mac", _compile_mac_cached, radix, K, width, blocked=blocked,
+        _label=f"mac:r{radix}:K{K}:w{width}")
+
+
+@functools.lru_cache(maxsize=64)
+def _compile_mac_cached(radix: int, K: int, width: int, *,
+                        blocked: bool = False) -> CompiledProgram:
     build = build_lut_blocked if blocked else build_lut_nonblocked
     lut_add = build(tt.full_adder(radix))
     lut_rsub = build(tt.rev_subtractor(radix))
@@ -275,10 +283,17 @@ def mac_reduce_program(lut_add: LUT, width: int, n_parts: int) -> Program:
     return tuple(prog)
 
 
-@functools.lru_cache(maxsize=64)
 def compile_mac_reduce(radix: int, width: int, n_parts: int, *,
                        blocked: bool = False) -> CompiledProgram:
     """Compile (cached) the ``n_parts``-way partial-sum reduction."""
+    return trace.traced_compile(
+        "compile_mac_reduce", _compile_mac_reduce_cached, radix, width,
+        n_parts, blocked=blocked, _label=f"reduce:{n_parts}x w{width}")
+
+
+@functools.lru_cache(maxsize=64)
+def _compile_mac_reduce_cached(radix: int, width: int, n_parts: int, *,
+                               blocked: bool = False) -> CompiledProgram:
     build = build_lut_blocked if blocked else build_lut_nonblocked
     lut_add = build(tt.full_adder(radix))
     return compile_program(mac_reduce_program(lut_add, width, n_parts))
@@ -345,7 +360,6 @@ def _reduce_plan(n_parts: int, width: int, max_cols: int | None
     return tuple(groups)
 
 
-@functools.lru_cache(maxsize=128)
 def compile_mac_tiled(radix: int, K: int, width: int, k_tile: int, *,
                       blocked: bool = False, max_cols: int | None = None
                       ) -> TiledMac:
@@ -359,6 +373,16 @@ def compile_mac_tiled(radix: int, K: int, width: int, k_tile: int, *,
     layers (:mod:`repro.apc.layers`) hit this once per projection shape and
     replay the same TiledMac for every request.
     """
+    return trace.traced_compile(
+        "compile_mac_tiled", _compile_mac_tiled_cached, radix, K, width,
+        k_tile, blocked=blocked, max_cols=max_cols,
+        _label=f"mac_tiled:K{K}/kt{k_tile}:w{width}")
+
+
+@functools.lru_cache(maxsize=128)
+def _compile_mac_tiled_cached(radix: int, K: int, width: int, k_tile: int, *,
+                              blocked: bool = False,
+                              max_cols: int | None = None) -> TiledMac:
     if k_tile < 1:
         raise ValueError(f"k_tile must be >= 1, got {k_tile}")
     if K < 1:

@@ -43,9 +43,12 @@ import jax
 import jax.numpy as jnp
 
 from ..core.ap import APStats
+from ..core.energy import T_EVALUATE_NS, T_PRECHARGE_NS, T_WRITE_NS
 from ..kernels.tap_pass.kernel import tap_run_program
 from ..kernels.tap_pass.ops import _pad_rows
+from . import trace
 from .lower import CompiledProgram, resolve_schedule
+from .metrics import get_registry
 from .mac import (TiledMac, decode_signed_digits_jnp, encode_mac_rows_jnp,
                   mac_layout)
 from .stats import HIST_BINS, TracedStats, accumulate
@@ -124,11 +127,15 @@ class ArrayPool:
         key = (id(compiled), name)
         hit = self._schedules.get(key)
         if hit is not None:
+            get_registry().counter("pool.schedule_reuse").inc()
             return hit[1], hit[2], hit[3]
         sched = tuple(jnp.asarray(t) for t in host)
         while len(self._schedules) >= self._max_schedules:   # FIFO evict
             self._schedules.pop(next(iter(self._schedules)))
         self._schedules[key] = (compiled, sched, variant, pack)
+        get_registry().counter("pool.schedule_uploads").inc()
+        trace.instant("schedule_upload", cat="pool", program=name,
+                      steps=compiled.n_steps, variant=variant)
         return sched, variant, pack
 
     # -- cost model ---------------------------------------------------------
@@ -180,26 +187,74 @@ class ArrayPool:
             if raw is not None:
                 counts.append(raw)
 
-        for b in range(self.n_blocks(n_rows)):
-            lo = b * self.rows
-            block = arr[lo:min(lo + self.rows, n_rows)]
-            valid = block.shape[0]
-            padded, _ = _pad_rows(block, self.rows)
-            # async dispatch: this launch targets array b % n_arrays while
-            # the next iteration encodes the following block (double
-            # buffering); bound in-flight launches to 2 per array
-            out, raw = tap_run_program(
-                padded, *sched, jnp.int32(valid), block_rows=self.rows,
-                collect_stats=collect_stats, hist_bins=HIST_BINS,
-                interpret=interpret, unroll=unroll, variant=variant,
-                pack=pack)
-            in_flight.append((out, raw, valid))
-            if len(in_flight) >= 2 * self.n_arrays:
-                oldest = in_flight.pop(0)
-                jax.block_until_ready(oldest[0])
-                drain(oldest)
-        for slot in in_flight:
-            drain(slot)
+        # tracing: one span per double-buffered wave (predicted cycles in
+        # args, measured host dispatch+drain time as the span duration),
+        # one launch instant per block, and the Table-XI-timed rendering of
+        # each launch on its array's model-time track
+        tr = trace.current_tracer()
+        n_blocks = self.n_blocks(n_rows)
+        run_span = wave_span = None
+        program_ns = (compiled.n_compare_cycles
+                      * (T_PRECHARGE_NS + T_EVALUATE_NS)
+                      + compiled.n_write_cycles * T_WRITE_NS)
+        if tr is not None:
+            wall = self.wall_cycles(n_rows, compiled.n_compare_cycles,
+                                    compiled.n_write_cycles)
+            run_span = tr.span(
+                "pool.run", cat="pool", rows=n_rows, blocks=n_blocks,
+                n_arrays=self.n_arrays, steps=compiled.n_steps,
+                variant=variant, predicted_waves=wall["waves"],
+                predicted_compare_cycles=wall["compare_cycles"],
+                predicted_write_cycles=wall["write_cycles"],
+                predicted_ns=wall["waves"] * program_ns).__enter__()
+        try:
+            for b in range(n_blocks):
+                lo = b * self.rows
+                block = arr[lo:min(lo + self.rows, n_rows)]
+                valid = block.shape[0]
+                padded, _ = _pad_rows(block, self.rows)
+                if tr is not None:
+                    w, a = divmod(b, self.n_arrays)
+                    if a == 0:
+                        if wave_span is not None:
+                            wave_span.__exit__(None, None, None)
+                        wave_span = tr.span(
+                            f"wave{w}", cat="pool",
+                            blocks=min(self.n_arrays, n_blocks - b),
+                            predicted_compare_cycles=(
+                                compiled.n_compare_cycles),
+                            predicted_write_cycles=compiled.n_write_cycles,
+                            predicted_ns=program_ns).__enter__()
+                    tr.instant("launch", cat="pool", block=b, array=a,
+                               rows=valid)
+                    tr.model_span(f"block{b}", track=f"arr{a}",
+                                  start_ns=run_span.ts_ns + w * program_ns,
+                                  dur_ns=program_ns, block=b, rows=valid)
+                # async dispatch: this launch targets array b % n_arrays
+                # while the next iteration encodes the following block
+                # (double buffering); bound in-flight launches to 2 per
+                # array
+                out, raw = tap_run_program(
+                    padded, *sched, jnp.int32(valid), block_rows=self.rows,
+                    collect_stats=collect_stats, hist_bins=HIST_BINS,
+                    interpret=interpret, unroll=unroll, variant=variant,
+                    pack=pack)
+                in_flight.append((out, raw, valid))
+                if len(in_flight) >= 2 * self.n_arrays:
+                    oldest = in_flight.pop(0)
+                    jax.block_until_ready(oldest[0])
+                    drain(oldest)
+            if wave_span is not None:
+                wave_span.__exit__(None, None, None)
+                wave_span = None
+            for slot in in_flight:
+                drain(slot)
+        finally:
+            if wave_span is not None:
+                wave_span.__exit__(None, None, None)
+            if run_span is not None:
+                run_span.__exit__(None, None, None)
+        get_registry().counter("pool.launches").inc(n_blocks)
         out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
         traced = None
         if collect_stats:
@@ -215,11 +270,14 @@ def run_pooled(arr: jax.Array, compiled: CompiledProgram, pool: ArrayPool,
     """Driver-style front door: pool.run + optional APStats accumulate
     (mirrors :func:`repro.apc.exec.run` for the single-array path).
     ``pool.run`` validates the column budget before any schedule upload."""
-    out, traced = pool.run(arr, compiled, collect_stats=stats is not None,
-                           interpret=interpret, kernel_variant=kernel_variant,
-                           unroll=unroll)
-    if stats is not None:
-        accumulate(stats, traced, compiled, n_rows=arr.shape[0])
+    with trace.span("run_pooled", cat="pool", rows=arr.shape[0]):
+        out, traced = pool.run(arr, compiled,
+                               collect_stats=stats is not None,
+                               interpret=interpret,
+                               kernel_variant=kernel_variant,
+                               unroll=unroll)
+        if stats is not None:
+            accumulate(stats, traced, compiled, n_rows=arr.shape[0])
     return out
 
 
@@ -255,7 +313,7 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
             pool.validate(prog)                     # fail before any launch
     radix, width = tiled.radix, tiled.width
 
-    def _run(arr, compiled):
+    def _run(arr, compiled, label):
         if pool is not None:
             out, traced = pool.run(arr, compiled,
                                    collect_stats=stats is not None,
@@ -270,23 +328,27 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
                                   kernel_variant=kernel_variant,
                                   unroll=unroll)
         if stats is not None:
-            accumulate(stats, traced, compiled, n_rows=R)
+            accumulate(stats, traced, compiled, n_rows=R, label=label)
         return out
 
-    partials: list[jax.Array] = []                  # [R, width] digit blocks
-    for (lo, hi), prog in zip(tiled.tiles, tiled.programs):
-        kt = hi - lo
-        arr_t = encode_mac_rows_jnp(x[:, lo:hi], w_ter[:, lo:hi], radix,
-                                    width)
-        out = _run(arr_t, prog)
-        base = mac_layout(kt, width)["acc_base"]
-        partials.append(out[:, base:base + width])
-    # sequential replay of the shared fold plan (graph.mac_fold_plan is the
-    # single source of truth for which partials feed which reduction)
-    carried = partials[0]
-    for stage in mac_fold_plan(tiled):
-        group = [carried if p == CARRIED else partials[p]
-                 for p in stage.parts]
-        out = _run(fold_stage_input(group), stage.prog)
-        carried = out[:, stage.out_lo:stage.out_hi]
-    return decode_signed_digits_jnp(carried, radix)
+    with trace.span("run_mac_tiled", cat="pool", rows=R, k=K,
+                    tiles=len(tiled.tiles), k_tile=tiled.k_tile):
+        partials: list[jax.Array] = []              # [R, width] digit blocks
+        for t, ((lo, hi), prog) in enumerate(zip(tiled.tiles,
+                                                 tiled.programs)):
+            kt = hi - lo
+            arr_t = encode_mac_rows_jnp(x[:, lo:hi], w_ter[:, lo:hi], radix,
+                                        width)
+            out = _run(arr_t, prog, f"tile{t}[{lo}:{hi}]")
+            base = mac_layout(kt, width)["acc_base"]
+            partials.append(out[:, base:base + width])
+        # sequential replay of the shared fold plan (graph.mac_fold_plan is
+        # the single source of truth for which partials feed which
+        # reduction)
+        carried = partials[0]
+        for j, stage in enumerate(mac_fold_plan(tiled)):
+            group = [carried if p == CARRIED else partials[p]
+                     for p in stage.parts]
+            out = _run(fold_stage_input(group), stage.prog, f"reduce{j}")
+            carried = out[:, stage.out_lo:stage.out_hi]
+        return decode_signed_digits_jnp(carried, radix)

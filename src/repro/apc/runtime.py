@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from ..core.ap import APStats
 from ..kernels.tap_pass.ops import _pad_rows
 from ..launch.mesh import data_axes
+from . import trace
 from .exec import sharded_program_run
 from .graph import ProgramGraph, graph_makespan
 from .lower import CompiledProgram
@@ -117,10 +118,13 @@ class DevicePool(ArrayPool):
         rows_per_dev = -(-n_rows // d)
         shard_rows = self.rows * max(1, -(-rows_per_dev // self.rows))
         padded, _ = _pad_rows(jnp.asarray(arr, jnp.int8), d * shard_rows)
-        out, raw = sharded_program_run(
-            padded, sched, self.mesh, self.axes, n_rows, self.rows,
-            collect_stats=collect_stats, interpret=interpret,
-            variant=variant, pack=pack, unroll=unroll)
+        with trace.span("devicepool.run", cat="pool", rows=n_rows,
+                        n_devices=d, n_arrays=self.n_arrays,
+                        steps=compiled.n_steps, variant=variant):
+            out, raw = sharded_program_run(
+                padded, sched, self.mesh, self.axes, n_rows, self.rows,
+                collect_stats=collect_stats, interpret=interpret,
+                variant=variant, pack=pack, unroll=unroll)
         out = out[:n_rows]
         if collect_stats:
             return out, TracedStats(raw)
@@ -192,11 +196,14 @@ class Runtime:
                 f"— the graph route runs with the Runtime's knobs; set "
                 f"it on the Runtime constructor")
 
-    def makespan(self, graph: ProgramGraph) -> dict[str, float]:
-        """Occupancy-model makespan of ``graph`` on this runtime's bank."""
+    def makespan(self, graph: ProgramGraph,
+                 record: list | None = None) -> dict[str, float]:
+        """Occupancy-model makespan of ``graph`` on this runtime's bank
+        (``record`` captures the per-array schedule; see
+        :func:`~repro.apc.graph.graph_makespan`)."""
         return graph_makespan(graph, n_arrays=self.pool.n_arrays,
                               rows_per_array=self.pool.rows,
-                              n_devices=self.n_devices)
+                              n_devices=self.n_devices, record=record)
 
     def run_graph(self, graph: ProgramGraph, *,
                   stats: APStats | None = None,
@@ -209,41 +216,92 @@ class Runtime:
         scheduler property tests pin down.
         """
         nodes = graph.nodes
+        waves = graph.wavefronts()
         if order is None:
-            order = [nid for wave in graph.wavefronts() for nid in wave]
+            order = [nid for wave in waves for nid in wave]
         if sorted(order) != list(range(len(nodes))):
             raise ValueError("order must be a permutation of all node ids")
         done: set[int] = set()
         results: dict[int, jax.Array] = {}
         traced: list[tuple[int, TracedStats | None]] = []
         collect = stats is not None
-        for nid in order:
-            node = nodes[nid]
-            if any(d not in done for d in node.deps):
-                raise ValueError(
-                    f"order runs node {nid} before its dependencies "
-                    f"{tuple(d for d in node.deps if d not in done)}")
-            arr = node.build(*(results[d] for d in node.deps))
-            if arr.ndim != 2 or arr.shape[0] != node.rows:
-                raise ValueError(
-                    f"node {nid} ({node.label or 'unlabeled'}) built a "
-                    f"{arr.shape} array, declared rows={node.rows}")
-            # issue the launch; jax dispatch is async, so launches of
-            # independent nodes in the same wavefront overlap in flight —
-            # the pool's own double buffering spreads blocks over arrays
-            out, tr = self.pool.run(arr, node.compiled,
-                                    collect_stats=collect,
-                                    interpret=self.interpret,
-                                    kernel_variant=self.kernel_variant,
-                                    unroll=self.unroll)
-            results[nid] = node.result(out)
-            traced.append((nid, tr))
-            done.add(nid)
-        if stats is not None:
-            for nid, tr in traced:
-                accumulate(stats, tr, nodes[nid].compiled,
-                           n_rows=nodes[nid].rows)
-        res = GraphResult(results, self.makespan(graph))
+        tracer = trace.current_tracer()
+        wave_of = {nid: w for w, ws in enumerate(waves) for nid in ws}
+        with trace.span("run_graph", cat="runtime", n_nodes=len(nodes),
+                        n_waves=len(waves)) as gspan:
+            # per-wavefront spans: a new one opens whenever the dispatch
+            # order crosses a wavefront boundary, so a custom (non-wave-
+            # major) order shows up as the same wavefront re-opening —
+            # predicted occupancy vs actual dispatch order, on one track
+            wave_span = None
+            cur_wave = None
+            try:
+                for pos, nid in enumerate(order):
+                    node = nodes[nid]
+                    if any(d not in done for d in node.deps):
+                        raise ValueError(
+                            f"order runs node {nid} before its dependencies "
+                            f"{tuple(d for d in node.deps if d not in done)}")
+                    if tracer is not None and wave_of[nid] != cur_wave:
+                        if wave_span is not None:
+                            wave_span.__exit__(None, None, None)
+                        cur_wave = wave_of[nid]
+                        wave_span = tracer.span(
+                            f"wavefront{cur_wave}", cat="runtime",
+                            wave=cur_wave,
+                            width=len(waves[cur_wave])).__enter__()
+                    with trace.span(node.label or f"node{nid}", cat="node",
+                                    node=nid, rows=node.rows,
+                                    dispatch_order=pos, wave=wave_of[nid],
+                                    compare_cycles=(
+                                        node.compiled.n_compare_cycles),
+                                    write_cycles=node.compiled.n_write_cycles,
+                                    deps=list(node.deps)):
+                        arr = node.build(*(results[d] for d in node.deps))
+                        if arr.ndim != 2 or arr.shape[0] != node.rows:
+                            raise ValueError(
+                                f"node {nid} ({node.label or 'unlabeled'}) "
+                                f"built a {arr.shape} array, declared "
+                                f"rows={node.rows}")
+                        # issue the launch; jax dispatch is async, so
+                        # launches of independent nodes in the same
+                        # wavefront overlap in flight — the pool's own
+                        # double buffering spreads blocks over arrays
+                        out, tr = self.pool.run(
+                            arr, node.compiled, collect_stats=collect,
+                            interpret=self.interpret,
+                            kernel_variant=self.kernel_variant,
+                            unroll=self.unroll)
+                    results[nid] = node.result(out)
+                    traced.append((nid, tr))
+                    done.add(nid)
+            finally:
+                if wave_span is not None:
+                    wave_span.__exit__(None, None, None)
+            if stats is not None:
+                for nid, tr in traced:
+                    accumulate(stats, tr, nodes[nid].compiled,
+                               n_rows=nodes[nid].rows,
+                               label=nodes[nid].label or f"node{nid}")
+            rec: list | None = [] if tracer is not None else None
+            res = GraphResult(results, self.makespan(graph, record=rec))
+            if tracer is not None:
+                gspan.set(makespan_cycles=res.report["makespan_cycles"],
+                          sequential_cycles=res.report["sequential_cycles"],
+                          makespan_ns=res.report["makespan_ns"],
+                          sequential_ns=res.report["sequential_ns"])
+                # render the occupancy model's per-array schedule as the
+                # model-time timeline, anchored under this graph's host span
+                base = gspan.ts_ns
+                for iv in rec:
+                    dev, a = divmod(iv["array"], self.pool.n_arrays)
+                    tracer.model_span(
+                        nodes[iv["node"]].label or f"node{iv['node']}",
+                        track=f"dev{dev}/arr{a}",
+                        start_ns=base + iv["start_ns"],
+                        dur_ns=iv["end_ns"] - iv["start_ns"],
+                        node=iv["node"], blocks=iv["blocks"],
+                        cycles=iv["end_cycles"] - iv["start_cycles"])
         self.last_report = res.report
         return res
 

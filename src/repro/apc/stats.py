@@ -25,6 +25,7 @@ import jax
 import numpy as np
 
 from ..core.ap import APStats
+from . import trace
 from .lower import CompiledProgram
 
 HIST_BINS = 8                     # matches APStats.mismatch_hist default
@@ -65,11 +66,21 @@ def to_ap_stats(traced: TracedStats, compiled: CompiledProgram,
 
 
 def accumulate(stats: APStats, traced: TracedStats,
-               compiled: CompiledProgram, n_rows: int) -> APStats:
-    """Merge a traced run into an existing APStats (driver-style, in place)."""
+               compiled: CompiledProgram, n_rows: int,
+               label: str = "") -> APStats:
+    """Merge a traced run into an existing APStats (driver-style, in place).
+
+    This is the single chokepoint every execution path's counters flow
+    through, so it is also where per-program trace attribution is emitted
+    (:meth:`repro.apc.trace.Tracer.attribute`): the event carries exactly
+    the integers merged here, which is what makes the tracer's per-phase
+    totals sum bit-identically to the aggregated APStats.
+    """
     counts = np.asarray(traced.block_counts, np.int64)  # the one host sync
-    stats.sets += int(counts[:, 0].sum())
-    stats.resets += int(counts[:, 1].sum())
+    sets = int(counts[:, 0].sum())
+    resets = int(counts[:, 1].sum())
+    stats.sets += sets
+    stats.resets += resets
     stats.n_compare_cycles += compiled.n_compare_cycles
     stats.n_write_cycles += compiled.n_write_cycles
     stats.n_rows = max(stats.n_rows, n_rows)
@@ -80,4 +91,10 @@ def accumulate(stats: APStats, traced: TracedStats,
         # mismatches", matching the kernel's own top-bin fold
         hist = np.concatenate([hist[:nb - 1], [hist[nb - 1:].sum()]])
     stats.mismatch_hist[:len(hist)] += hist
+    tr = trace.current_tracer()
+    if tr is not None:
+        tr.attribute(sets=sets, resets=resets,
+                     compare_cycles=compiled.n_compare_cycles,
+                     write_cycles=compiled.n_write_cycles, n_rows=n_rows,
+                     mismatch_hist=tuple(int(h) for h in hist), label=label)
     return stats

@@ -119,6 +119,7 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
     the final scale-multiply is the same float32 op.
     """
     from repro import apc
+    from repro.apc import trace
 
     xi, max_abs = _as_int_activations(x)
     m, kdim = xi.shape
@@ -139,6 +140,24 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
             f"(mac_acc_width({radix}, {kp}, {max_abs}))")
     # row (m, n) <- (x[m, :], w[:, n]): M*N dot products, device-side
     x_rows, w_rows = apc.matmul_mac_rows(xi, w_ter)                # [M*N, K']
+    route = ("runtime" if runtime is not None
+             else "tiled" if pool is not None or k_tile is not None
+             else "plain")
+    with trace.span("ternary_matmul_ap", cat="matmul", m=m, k=kp, n=n,
+                    width=width, route=route):
+        acc = _run_routed(apc, x_rows, w_rows, radix, kp, width,
+                          mesh=mesh, pool=pool, runtime=runtime,
+                          k_tile=k_tile, stats=stats, block_rows=block_rows,
+                          blocked=blocked, interpret=interpret,
+                          kernel_variant=kernel_variant, unroll=unroll)
+    y = (acc.reshape(m, n).astype(jnp.float32)
+         * jnp.asarray(scale, jnp.float32)[None, :])
+    return y.astype(x.dtype)
+
+
+def _run_routed(apc, x_rows, w_rows, radix, kp, width, *, mesh, pool,
+                runtime, k_tile, stats, block_rows, blocked, interpret,
+                kernel_variant, unroll):
     if runtime is not None:
         if mesh is not None or pool is not None:
             raise ValueError("runtime= already carries a pool; pass one of "
@@ -155,8 +174,8 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
                                       blocked=blocked, max_cols=max_cols)
         (digits,) = runtime.run_mac_graph([(x_rows, w_rows, tiled)],
                                           stats=stats)
-        acc = apc.decode_signed_digits_jnp(digits, radix)
-    elif pool is not None or k_tile is not None:
+        return apc.decode_signed_digits_jnp(digits, radix)
+    if pool is not None or k_tile is not None:
         if mesh is not None:
             raise ValueError("the tiled/pool route does not mesh-shard; "
                              "pass one of mesh= or pool=/k_tile=")
@@ -165,20 +184,17 @@ def ternary_matmul_ap(x: jax.Array, packed: jax.Array, scale: jax.Array,
                                                               width)
         tiled = apc.compile_mac_tiled(radix, kp, width, kt,
                                       blocked=blocked, max_cols=max_cols)
-        acc = apc.run_mac_tiled(x_rows, w_rows, tiled, pool=pool,
-                                stats=stats, block_rows=block_rows,
-                                interpret=interpret,
-                                kernel_variant=kernel_variant, unroll=unroll)
-    else:
-        compiled = apc.compile_mac(radix, kp, width, blocked=blocked)
-        arr = apc.encode_mac_rows_jnp(x_rows, w_rows, radix, width)
-        out = apc.run(arr, compiled, stats=stats, mesh=mesh,
-                      block_rows=block_rows, interpret=interpret,
-                      kernel_variant=kernel_variant, unroll=unroll)
-        acc = apc.decode_mac_acc_jnp(out, radix, kp, width)        # [M*N]
-    y = (acc.reshape(m, n).astype(jnp.float32)
-         * jnp.asarray(scale, jnp.float32)[None, :])
-    return y.astype(x.dtype)
+        return apc.run_mac_tiled(x_rows, w_rows, tiled, pool=pool,
+                                 stats=stats, block_rows=block_rows,
+                                 interpret=interpret,
+                                 kernel_variant=kernel_variant,
+                                 unroll=unroll)
+    compiled = apc.compile_mac(radix, kp, width, blocked=blocked)
+    arr = apc.encode_mac_rows_jnp(x_rows, w_rows, radix, width)
+    out = apc.run(arr, compiled, stats=stats, mesh=mesh,
+                  block_rows=block_rows, interpret=interpret,
+                  kernel_variant=kernel_variant, unroll=unroll)
+    return apc.decode_mac_acc_jnp(out, radix, kp, width)           # [M*N]
 
 
 def ap_matmul_cycle_counts(radix: int, K: int, width: int,

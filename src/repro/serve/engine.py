@@ -15,6 +15,7 @@ write/compare cycles, Table XI energy, and graph-scheduler makespan.
 """
 from __future__ import annotations
 
+import time
 from contextlib import nullcontext
 from dataclasses import dataclass
 
@@ -22,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..apc import trace
+from ..apc.metrics import get_registry
 from ..configs.base import ModelConfig
 from ..models import model as M
 
@@ -41,6 +44,10 @@ class Engine:
         self.mesh = mesh
         self.serve = serve
         self.ap_ctx = ap_ctx
+        # host-measured latency breakdown of the last generate() request
+        # (always recorded; independent of REPRO_AP_TRACE)
+        self.last_latency: dict | None = None
+        self._trace_mark = 0           # attribution slice of last request
         # the AP path cannot live under jit (program-graph execution is
         # host-orchestrated); everything else compiles as before
         self._step = (self._decode_step if ap_ctx is not None
@@ -65,29 +72,98 @@ class Engine:
             ap_guard = ap_serving(self.ap_ctx)
         else:
             ap_guard = nullcontext()
-        with self.mesh, ap_guard:
+        tracer = trace.current_tracer()
+        self._trace_mark = (tracer.attribution_mark()
+                            if tracer is not None else 0)
+        reg = get_registry()
+        t_req = time.perf_counter()
+        decode_s = 0.0
+        with self.mesh, ap_guard, \
+                trace.span("request", cat="serve", batch=b,
+                           prompt_len=s_prompt, n_new=n_new,
+                           ap=self.ap_ctx is not None):
             # prefill: feed prompt tokens one step at a time
             logits = None
-            for i in range(s_prompt):
-                logits, cache = self._step(
-                    self.params, cache,
-                    jnp.asarray(prompts[:, i], jnp.int32), jnp.int32(i))
+            with trace.span("prefill", cat="serve", steps=s_prompt):
+                for i in range(s_prompt):
+                    logits, cache = self._step(
+                        self.params, cache,
+                        jnp.asarray(prompts[:, i], jnp.int32), jnp.int32(i))
+                jax.block_until_ready(logits)
+            t_prefill = time.perf_counter()
             out = []
             tok = self._sample(logits, key)
             for j in range(n_new):
                 out.append(np.asarray(tok))
-                logits, cache = self._step(self.params, cache, tok,
-                                           jnp.int32(s_prompt + j))
-                key = jax.random.fold_in(key, j)
-                tok = self._sample(logits, key)
+                t0 = time.perf_counter()
+                with trace.span(f"decode{j}", cat="serve", step=j):
+                    logits, cache = self._step(self.params, cache, tok,
+                                               jnp.int32(s_prompt + j))
+                    key = jax.random.fold_in(key, j)
+                    tok = self._sample(logits, key)
+                    jax.block_until_ready(tok)
+                step_s = time.perf_counter() - t0
+                decode_s += step_s
+                reg.histogram("serve.decode_step_ms").observe(1e3 * step_s)
+        request_s = time.perf_counter() - t_req
+        self.last_latency = {
+            "request_ms": 1e3 * request_s,
+            "prefill_ms": 1e3 * (t_prefill - t_req),
+            "decode_ms": 1e3 * decode_s,
+            "n_prefill_steps": s_prompt,
+            "n_decode_steps": n_new,
+        }
+        reg.counter("serve.requests").inc()
+        reg.histogram("serve.request_ms").observe(1e3 * request_s)
         return np.stack(out, axis=1)
 
     def ap_report(self) -> dict | None:
         """Aggregated AP accounting of the last :meth:`generate` request:
-        write/compare cycles, sets/resets, Table XI energy, and the graph
-        scheduler's makespan vs naive sequential drains.  None when the
-        engine serves without an AP context."""
-        return None if self.ap_ctx is None else self.ap_ctx.report()
+        write/compare cycles, sets/resets, Table XI energy, the graph
+        scheduler's makespan vs naive sequential drains, compile/serving
+        cache occupancy (``cache``), the host latency breakdown
+        (``latency``), and — when a tracer was active during the request —
+        the per-phase cycle/energy attribution (``phases``).
+
+        None when the engine serves without an AP context.  Raises when an
+        AP context IS configured but the last request never routed a
+        projection through it (``n_graphs == 0``) — that means the request
+        silently bypassed ``ap_serving`` (no packed-ternary MLP/MoE params
+        in this config, or :meth:`generate` has not run), and a silent
+        all-zero report would be misread as a free request.
+        """
+        if self.ap_ctx is None:
+            return None
+        if self.ap_ctx.n_graphs == 0:
+            raise RuntimeError(
+                "Engine has ap_ctx configured but the last request served "
+                "no AP projections (n_graphs == 0): either generate() has "
+                "not run yet, or the model config carries no packed-ternary "
+                "MLP/MoE params so every projection bypassed ap_serving. "
+                "Enable ternary packing in the model config (cfg.ternary."
+                "enabled) or drop ap_ctx to serve on the float path.")
+        rep = self.ap_ctx.report()
+        rep["cache"] = self.ap_ctx.cache_stats()
+        rep["latency"] = self.last_latency
+        tracer = trace.current_tracer()
+        if tracer is not None:
+            from ..apc.layers import N_MASKED_MAC
+            from ..core.ap import APStats
+            from ..core.energy import energy_from_stats
+            mark = getattr(self, "_trace_mark", 0)
+            phases = {}
+            for phase, tot in tracer.phase_totals(start=mark).items():
+                st = APStats(radix=self.ap_ctx.radix)
+                st.sets, st.resets = tot["sets"], tot["resets"]
+                st.n_compare_cycles = tot["compare_cycles"]
+                st.n_write_cycles = tot["write_cycles"]
+                h = np.asarray(tot["mismatch_hist"],
+                               np.int64)[:len(st.mismatch_hist)]
+                st.mismatch_hist[:len(h)] = h
+                e = energy_from_stats(st, n_masked=N_MASKED_MAC)
+                phases[phase] = dict(tot, energy_total_j=e.total_j)
+            rep["phases"] = phases
+        return rep
 
     def _sample(self, logits, key):
         if self.serve.temperature <= 0:

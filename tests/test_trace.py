@@ -1,0 +1,355 @@
+"""AP telemetry subsystem: tracer invariants, metrics quantiles, Perfetto
+export schema, and the no-overhead / bit-exactness contracts.
+
+Acceptance contract (ISSUE 6):
+
+- span nesting/ordering: every closed span carries its parent, child
+  intervals nest inside the parent's, misnested exits raise;
+- Histogram.quantile matches numpy.percentile (linear interpolation) on
+  the retained window;
+- to_chrome() round-trips through validate_chrome_trace: metadata first,
+  "X" events with µs timestamps, model-time slices on pid 1;
+- with tracing OFF the instrumented paths leave digits + APStats
+  bit-identical across kernel variants (parity vs a traced run);
+- per-program attribution sums bit-exactly back to the APStats the same
+  run aggregated (total_ap_stats == stats);
+- compile front doors bump hit/miss counters in the metrics registry;
+- Engine.ap_report raises (not silently zeroes) when the AP context was
+  configured but never reached.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import apc
+from repro.apc import metrics, trace
+from repro.core.ap import APStats
+
+
+def _mac_inputs(R=24, K=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-3, 4, size=(R, K)).astype(np.int32)
+    w = rng.integers(-1, 2, size=(R, K)).astype(np.int32)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# tracer core: spans, nesting, instants
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_ordering():
+    t = trace.Tracer()
+    with trace.tracing(t):
+        with trace.span("outer", cat="serve"):
+            with trace.span("inner1", cat="pool") as s:
+                s.set(k=1)
+            with trace.span("inner2", cat="pool"):
+                trace.instant("tick", cat="pool")
+    spans = {e.name: e for e in t.events
+             if isinstance(e, trace.SpanRecord)}
+    assert set(spans) == {"outer", "inner1", "inner2"}
+    outer, i1, i2 = spans["outer"], spans["inner1"], spans["inner2"]
+    assert i1.parent == "outer" and i2.parent == "outer"
+    assert outer.parent is None
+    # children nest inside the parent interval, in issue order
+    assert outer.ts_ns <= i1.ts_ns
+    assert i1.ts_ns + i1.dur_ns <= i2.ts_ns + i2.dur_ns
+    assert i2.ts_ns + i2.dur_ns <= outer.ts_ns + outer.dur_ns
+    assert spans["inner1"].args["k"] == 1
+    insts = [e for e in t.events if isinstance(e, trace.InstantRecord)]
+    assert len(insts) == 1 and insts[0].name == "tick"
+
+
+def test_misnested_span_exit_raises():
+    t = trace.Tracer()
+    with trace.tracing(t):
+        a = t.span("a", cat="x")
+        b = t.span("b", cat="x")
+        a.__enter__()
+        b.__enter__()
+        with pytest.raises(RuntimeError):
+            a.__exit__(None, None, None)      # b still open
+        b.__exit__(None, None, None)
+        a.__exit__(None, None, None)
+
+
+def test_spans_are_noops_when_disabled():
+    with trace.disabled():
+        assert trace.current_tracer() is None
+        with trace.span("x", cat="y") as s:
+            assert s is None                  # null span yields None
+        trace.instant("i", cat="y")           # must not raise
+
+
+def test_env_toggle_controls_global_tracer(monkeypatch):
+    monkeypatch.setenv(trace.TRACE_ENV, "0")
+    trace.reset_global_tracer()
+    assert trace.env_enabled() is False
+    assert trace.current_tracer() is None
+    monkeypatch.setenv(trace.TRACE_ENV, "1")
+    trace.reset_global_tracer()
+    assert trace.env_enabled() is True
+    tr = trace.current_tracer()
+    assert tr is not None and tr is trace.global_tracer()
+    with trace.span("g", cat="x"):
+        pass
+    assert any(isinstance(e, trace.SpanRecord) and e.name == "g"
+               for e in tr.events)
+    monkeypatch.delenv(trace.TRACE_ENV)
+    trace.reset_global_tracer()
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_histogram_quantiles_match_numpy_percentile():
+    rng = np.random.default_rng(3)
+    xs = rng.exponential(10.0, size=500)
+    h = metrics.Histogram("h")
+    for v in xs:
+        h.observe(float(v))
+    for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+        assert h.quantile(q) == pytest.approx(
+            np.percentile(xs, 100 * q), rel=1e-12)
+    assert h.count == 500
+    assert h.total == pytest.approx(xs.sum())
+
+
+def test_histogram_window_bounds_memory():
+    h = metrics.Histogram("h", max_samples=8)
+    for v in range(100):
+        h.observe(float(v))
+    assert h.count == 100                     # exact even past the window
+    assert h.min == 0.0 and h.max == 99.0
+    # quantiles come from the retained (most recent) window
+    assert h.quantile(0.0) >= 92.0
+
+
+def test_registry_types_and_reset():
+    reg = metrics.MetricsRegistry()
+    reg.counter("c").inc(3)
+    reg.gauge("g").set(1.5)
+    reg.histogram("h").observe(2.0)
+    snap = reg.snapshot()
+    assert snap["c"] == 3 and snap["g"] == 1.5
+    assert snap["h"]["count"] == 1
+    with pytest.raises(TypeError):
+        reg.gauge("c")                        # name already a counter
+    reg.reset()
+    assert reg.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+
+def test_chrome_export_schema_roundtrip():
+    t = trace.Tracer()
+    with trace.tracing(t):
+        with trace.span("root", cat="serve", batch=1):
+            with trace.span("child", cat="pool"):
+                pass
+            t.model_span("prog", track="arr0", start_ns=t.now_ns(),
+                         dur_ns=2000, block=0)
+            trace.instant("up", cat="pool")
+    doc = t.to_chrome()
+    events = trace.validate_chrome_trace(json.loads(json.dumps(doc)))
+    xs = [e for e in events if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"root", "child", "prog"}
+    by_name = {e["name"]: e for e in xs}
+    assert by_name["root"]["pid"] == trace.HOST_PID
+    assert by_name["prog"]["pid"] == trace.MODEL_PID
+    assert by_name["child"]["args"]["parent"] == "root"
+    # µs conversion: child inside root on the exported timeline too
+    assert by_name["root"]["ts"] <= by_name["child"]["ts"]
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert {m["name"] for m in meta} >= {"process_name", "thread_name"}
+    # metadata precedes all slice events
+    first_x = next(i for i, e in enumerate(doc["traceEvents"])
+                   if e["ph"] == "X")
+    assert all(e["ph"] == "M" for e in doc["traceEvents"][:first_x])
+
+
+def test_validate_chrome_trace_rejects_bad_docs():
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace({"traceEvents": []})
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace({"nope": 1})
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "a"}]})  # missing fields
+
+
+# ---------------------------------------------------------------------------
+# instrumented paths: parity off, bit-exact attribution on
+# ---------------------------------------------------------------------------
+
+def test_tracing_off_is_bit_identical_across_variants():
+    """REPRO_AP_TRACE=0 parity: digits + APStats unchanged by the
+    instrumentation, for every kernel variant, traced or not."""
+    x, w = _mac_inputs()
+    radix, width, K = 3, 8, x.shape[1]
+    outs, stats = [], []
+    for traced in (False, True):
+        for kv in apc.KERNEL_VARIANTS:
+            st = APStats(radix=radix)
+            pool = apc.ArrayPool(n_arrays=2, rows=16, cols=96)
+            tiled = apc.compile_mac_tiled(radix, K, width, 4,
+                                          max_cols=pool.cols)
+            guard = (trace.tracing(trace.Tracer()) if traced
+                     else trace.disabled())
+            with guard:
+                outs.append(np.asarray(apc.run_mac_tiled(
+                    x, w, tiled, pool=pool, stats=st, kernel_variant=kv)))
+            stats.append(st)
+    for o in outs[1:]:
+        assert np.array_equal(outs[0], o)
+    for st in stats[1:]:
+        assert (st.sets, st.resets) == (stats[0].sets, stats[0].resets)
+        assert st.n_compare_cycles == stats[0].n_compare_cycles
+        assert st.n_write_cycles == stats[0].n_write_cycles
+        assert np.array_equal(st.mismatch_hist, stats[0].mismatch_hist)
+
+
+def test_attribution_sums_bit_exactly_to_ap_stats():
+    x, w = _mac_inputs(seed=5)
+    radix, width, K = 3, 8, x.shape[1]
+    st = APStats(radix=radix)
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=96)
+    tiled = apc.compile_mac_tiled(radix, K, width, 4, max_cols=pool.cols)
+    t = trace.Tracer()
+    with trace.tracing(t):
+        apc.run_mac_tiled(x, w, tiled, pool=pool, stats=st)
+    tot = t.total_ap_stats(radix)
+    assert tot.sets == st.sets and tot.resets == st.resets
+    assert tot.n_compare_cycles == st.n_compare_cycles
+    assert tot.n_write_cycles == st.n_write_cycles
+    assert np.array_equal(tot.mismatch_hist, st.mismatch_hist)
+    # every program labelled, under the "pool" phase
+    phases = t.phase_totals()
+    assert set(phases) == {"pool"}
+    assert phases["pool"]["programs"] == len(t.attributions)
+    assert phases["pool"]["write_cycles"] == st.n_write_cycles
+
+
+def test_runtime_graph_attribution_and_model_timeline():
+    x, w = _mac_inputs(seed=9)
+    radix, width, K = 3, 8, x.shape[1]
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=96)
+    rt = apc.Runtime(pool)
+    tiled = apc.compile_mac_tiled(radix, K, width, 4, max_cols=pool.cols)
+    st = APStats(radix=radix)
+    t = trace.Tracer()
+    with trace.tracing(t):
+        rt.run_mac_graph([(x, w, tiled)], stats=st)
+    tot = t.total_ap_stats(radix)
+    assert tot.n_write_cycles == st.n_write_cycles
+    assert tot.sets == st.sets and tot.resets == st.resets
+    spans = [e for e in t.events if isinstance(e, trace.SpanRecord)]
+    names = {s.name for s in spans}
+    assert "run_graph" in names
+    assert any(n.startswith("wavefront") for n in names)
+    # model-time slices live on pid 1: pool block launches on arr* tracks,
+    # the scheduler's per-node intervals on dev*/arr* tracks
+    model = [s for s in spans if s.pid == trace.MODEL_PID]
+    assert model
+    assert any(s.track.startswith("dev") for s in model)
+    assert any(s.track.startswith("arr") for s in model)
+    gspan = next(s for s in spans if s.name == "run_graph")
+    assert gspan.args["makespan_cycles"] <= gspan.args["sequential_cycles"]
+
+
+def test_compile_cache_hit_miss_counters():
+    reg = metrics.get_registry()
+    apc.clear_compile_caches()
+    reg.reset()
+    apc.compile_named("add", 3, 6)
+    apc.compile_named("add", 3, 6)
+    snap = reg.snapshot()
+    assert snap["compile.compile_named.misses"] == 1
+    assert snap["compile.compile_named.hits"] == 1
+
+
+def test_traced_compile_emits_span_only_on_miss():
+    apc.clear_compile_caches()
+    t = trace.Tracer()
+    with trace.tracing(t):
+        apc.compile_named("add", 3, 7)
+        apc.compile_named("add", 3, 7)
+    spans = [e for e in t.events if isinstance(e, trace.SpanRecord)
+             and e.cat == "compile"]
+    # misses (compile_named + its nested compile_steps) get spans; the
+    # second call is a hit and downgrades to an instant
+    assert spans and all(s.args["cache"] == "miss" for s in spans)
+    assert sum(s.name.startswith("compile:add") for s in spans) == 1
+    hits = [e for e in t.events if isinstance(e, trace.InstantRecord)
+            and e.name.startswith("compile_hit:add")]
+    assert len(hits) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine report guard
+# ---------------------------------------------------------------------------
+
+def test_ap_report_raises_when_request_bypassed_ap():
+    from repro.serve.engine import Engine
+    eng = Engine.__new__(Engine)              # no heavy model construction
+    eng.ap_ctx = None
+    assert eng.ap_report() is None
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=96)
+    eng.ap_ctx = apc.APServeContext(apc.Runtime(pool), x_levels=7)
+    with pytest.raises(RuntimeError, match="bypassed ap_serving"):
+        eng.ap_report()
+
+
+@pytest.mark.slow
+def test_engine_request_under_env_toggle_emits_valid_trace(monkeypatch):
+    """The acceptance path: REPRO_AP_TRACE=1 (global tracer, no explicit
+    tracing() scope) + one Engine(ap_ctx=...) request ⇒ valid Perfetto
+    JSON with compile/pool-wave/runtime-wavefront spans and attribution
+    summing bit-exactly to the request's APStats / Table XI energy."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.core.energy import energy_from_stats
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import model as M
+    from repro.models.quant import quantize_model_params
+    from repro.serve.engine import Engine, ServeCfg
+    monkeypatch.setenv(trace.TRACE_ENV, "1")
+    trace.reset_global_tracer()
+    apc.clear_compile_caches()
+    try:
+        base = get_smoke_config("qwen3-0.6b")
+        cfg = base.with_(n_layers=1, d_model=16, d_ff=24, n_heads=2,
+                         n_kv_heads=2, head_dim=8, vocab=32,
+                         ternary=base.ternary.__class__(enabled=True))
+        mesh = make_smoke_mesh()
+        qparams = quantize_model_params(
+            M.init_params(cfg, jax.random.PRNGKey(0)))
+        pool = apc.ArrayPool(n_arrays=4, rows=64, cols=64)
+        ctx = apc.APServeContext(apc.Runtime(pool), x_levels=7)
+        eng = Engine(cfg, qparams, mesh, ServeCfg(max_len=8), ap_ctx=ctx)
+        eng.generate(np.array([[3]], dtype=np.int32), 1)
+        t = trace.global_tracer()
+        events = trace.validate_chrome_trace(
+            json.loads(json.dumps(t.to_chrome())))
+        names = {e["name"] for e in events if e["ph"] == "X"}
+        assert "request" in names and "prefill" in names
+        assert any(n.startswith("compile:") for n in names)
+        assert any(n.startswith("wave") for n in names)
+        assert any(n.startswith("wavefront") for n in names)
+        tot = t.total_ap_stats(ctx.radix)
+        assert tot.sets == ctx.stats.sets
+        assert tot.n_compare_cycles == ctx.stats.n_compare_cycles
+        assert tot.n_write_cycles == ctx.stats.n_write_cycles
+        assert np.array_equal(tot.mismatch_hist, ctx.stats.mismatch_hist)
+        from repro.apc.layers import N_MASKED_MAC
+        assert energy_from_stats(tot, n_masked=N_MASKED_MAC).total_j == \
+            energy_from_stats(ctx.stats, n_masked=N_MASKED_MAC).total_j
+        rep = eng.ap_report()
+        assert rep["phases"] and rep["cache"] and rep["latency"]
+    finally:
+        monkeypatch.delenv(trace.TRACE_ENV)
+        trace.reset_global_tracer()
