@@ -1,0 +1,127 @@
+"""Sustained-traffic benchmark of the continuous-batching AP serve engine.
+
+Offers a Poisson-ish open-loop request stream (fixed inter-arrival gap) to a
+:class:`repro.serve.batcher.BatchServer` over the smallest real AP-backed
+Engine (packed-ternary MLP through the program-graph runtime), and reports
+the serving curve: achieved requests/sec and p50/p99 request latency vs
+offered load, plus wave/merge occupancy (how many source graph nodes the
+batcher folded into how many merged launches).
+
+Each sweep point is recorded as one row of the ``ap_serve`` trajectory::
+
+    {"bench": "ap_serve", "offered_rps": ..., "achieved_rps": ...,
+     "p50_ms": ..., "p99_ms": ..., "n_requests": ..., "max_inflight": ...,
+     "n_waves": ..., "merge_ratio": ...}
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--record]
+
+``--smoke`` shrinks the sweep to a seconds-scale CI gate; ``--record``
+writes the rows into benchmarks/apc_bench.json (read-modify-write, keeping
+the other trajectories).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax                                                    # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro import apc                                         # noqa: E402
+from repro.configs import get_smoke_config                    # noqa: E402
+from repro.launch.mesh import make_smoke_mesh                 # noqa: E402
+from repro.models import model as M                           # noqa: E402
+from repro.models.quant import quantize_model_params          # noqa: E402
+from repro.serve.batcher import AdmissionCfg, BatchServer     # noqa: E402
+from repro.serve.engine import Engine, ServeCfg               # noqa: E402
+
+
+def build_engine(*, n_arrays: int = 4, rows: int = 64) -> Engine:
+    """Smallest Engine whose MLPs really run on the AP runtime."""
+    base = get_smoke_config("qwen3-0.6b")
+    cfg = base.with_(n_layers=1, d_model=16, d_ff=24, n_heads=2,
+                     n_kv_heads=2, head_dim=8, vocab=32,
+                     ternary=base.ternary.__class__(enabled=True))
+    mesh = make_smoke_mesh()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = quantize_model_params(params)
+    pool = apc.ArrayPool(n_arrays=n_arrays, rows=rows, cols=64)
+    ctx = apc.APServeContext(apc.Runtime(pool), x_levels=7)
+    return Engine(cfg, qparams, mesh, ServeCfg(max_len=8), ap_ctx=ctx)
+
+
+def run_load_point(offered_rps: float, n_requests: int, *,
+                   max_inflight: int = 8, s_prompt: int = 3,
+                   n_new: int = 3, seed: int = 0) -> dict:
+    """Offer ``n_requests`` at ``offered_rps`` (open loop); one row."""
+    eng = build_engine()
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, eng.cfg.vocab, size=(1, s_prompt))
+               for _ in range(n_requests)]
+    gap = 1.0 / offered_rps if offered_rps > 0 else 0.0
+    t0 = time.perf_counter()
+    with BatchServer(eng, admission=AdmissionCfg(
+            max_inflight=max_inflight)) as srv:
+        handles = []
+        for p in prompts:
+            handles.append(srv.submit(p, n_new))
+            if gap:
+                time.sleep(gap)
+        for h in handles:
+            h.result(timeout=600)
+        n_waves = srv.n_waves
+    wall = time.perf_counter() - t0
+    lats = np.asarray([h.latency_ms for h in handles], np.float64)
+    row = {
+        "bench": "ap_serve",
+        "offered_rps": round(offered_rps, 3),
+        "achieved_rps": round(n_requests / wall, 3),
+        "p50_ms": round(float(np.percentile(lats, 50)), 2),
+        "p99_ms": round(float(np.percentile(lats, 99)), 2),
+        "mean_ms": round(float(lats.mean()), 2),
+        "n_requests": n_requests,
+        "s_prompt": s_prompt,
+        "n_new": n_new,
+        "max_inflight": max_inflight,
+        "n_waves": n_waves,
+        "wall_s": round(wall, 3),
+    }
+    print(f"ap_serve offered={row['offered_rps']}rps "
+          f"achieved={row['achieved_rps']}rps p50={row['p50_ms']}ms "
+          f"p99={row['p99_ms']}ms waves={n_waves}")
+    return row
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="seconds-scale sweep: the CI serve gate")
+    p.add_argument("--record", action="store_true",
+                   help="write the ap_serve trajectory into apc_bench.json")
+    p.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "apc_bench.json"))
+    args = p.parse_args()
+    if args.smoke:
+        points = [(4.0, 4), (16.0, 6)]
+    else:
+        points = [(0.5, 8), (2.0, 12), (8.0, 16), (32.0, 16)]
+    rows = [run_load_point(rps, n) for rps, n in points]
+    if args.record:
+        with open(args.json) as f:
+            doc = json.load(f)
+        doc["ap_serve"] = rows
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"ap_serve trajectory -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -97,13 +97,25 @@ def fold_stage_input(group: list[jax.Array]) -> jax.Array:
 
 @dataclass(frozen=True)
 class GraphNode:
-    """One compiled-program launch over ``rows`` CAM rows."""
+    """One compiled-program launch over ``rows`` CAM rows.
+
+    ``block_valid`` (optional) marks the node as a *row-concatenated*
+    launch: the built array is a sequence of row blocks (the pool's block
+    size) where block ``b`` carries ``block_valid[b]`` valid rows at its
+    top and zero padding below — the executor masks the padding out of
+    the counters per block (exactly as it masks the tail block of an
+    ordinary launch) and compacts the output to the valid rows.  This is
+    how independent requests share one schedule replay: their row
+    segments ride the same launch while per-block counters stay an exact
+    per-segment partition.
+    """
     compiled: CompiledProgram
     rows: int
     build: Callable[..., jax.Array]          # (*dep_results) -> [rows, cols]
     deps: tuple[int, ...] = ()
     result_cols: tuple[int, int] | None = None
     label: str = ""
+    block_valid: tuple[int, ...] | None = None
 
     @property
     def cycles(self) -> int:
@@ -135,7 +147,8 @@ class ProgramGraph:
     def add(self, compiled: CompiledProgram, *, rows: int,
             build: Callable[..., jax.Array], deps: tuple[int, ...] = (),
             result_cols: tuple[int, int] | None = None,
-            label: str = "") -> int:
+            label: str = "",
+            block_valid: tuple[int, ...] | None = None) -> int:
         if rows < 0:
             raise ValueError(f"rows must be >= 0, got {rows}")
         nid = len(self.nodes)
@@ -146,7 +159,7 @@ class ProgramGraph:
                     f"already-added node (graphs are built in topological "
                     f"order)")
         self.nodes.append(GraphNode(compiled, rows, build, tuple(deps),
-                                    result_cols, label))
+                                    result_cols, label, block_valid))
         return nid
 
     def wavefronts(self) -> list[list[int]]:
@@ -295,3 +308,188 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
             "sequential_ns": seq_ns,
             "n_arrays_total": total,
             "n_nodes": len(graph.nodes)}
+
+
+# ---------------------------------------------------------------------------
+# Coalescing: row-concatenate many graphs' like nodes into shared launches
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MergedSlice:
+    """Where one source node landed inside a coalesced graph.
+
+    ``node`` is the merged node id; ``res_lo:res_hi`` is the source node's
+    row range in the merged node's *compacted* result (the executor drops
+    per-block padding rows, so result offsets count valid rows only);
+    ``block_lo:block_hi`` is its block range in the merged launch — the
+    per-block :class:`~repro.apc.stats.TracedStats` counters of those
+    blocks are exactly the counters the source node's standalone launch
+    would have produced.
+    """
+    node: int
+    rows: int
+    res_lo: int
+    res_hi: int
+    block_lo: int
+    block_hi: int
+
+
+class MergedGraphView:
+    """One source graph's results, sliced out of a coalesced run.
+
+    Duck-types the ``{node_id: result}`` mapping of
+    :class:`~repro.apc.runtime.GraphResult` for the source graph's node
+    ids, so decode handles (:class:`~repro.apc.layers.APCall`) work
+    unchanged on batched results.  ``report`` carries the *standalone*
+    occupancy report of the source graph (what this request would cost
+    alone — the per-request number sequential serving records), not the
+    shared wave's.
+    """
+
+    def __init__(self, result, slices: dict[int, "MergedSlice"],
+                 report: dict):
+        self._result = result
+        self._slices = slices
+        self.report = report
+
+    def __getitem__(self, nid: int):
+        sl = self._slices[nid]
+        return self._result[sl.node][sl.res_lo:sl.res_hi]
+
+    def __contains__(self, nid: int) -> bool:
+        return nid in self._slices
+
+    def __len__(self) -> int:
+        return len(self._slices)
+
+
+def _block_split(rows: int, block_rows: int) -> tuple[int, ...]:
+    """Per-block valid row counts of a ``rows``-row segment."""
+    nb = max(1, math.ceil(rows / block_rows))
+    return tuple([block_rows] * (nb - 1) + [rows - (nb - 1) * block_rows])
+
+
+def coalesce_graphs(graphs: list[ProgramGraph], *, block_rows: int
+                    ) -> tuple[ProgramGraph, list[dict[int, MergedSlice]]]:
+    """Merge many independent graphs into ONE, row-concatenating like
+    nodes along the pool's row/batch axis.
+
+    Nodes merge when they run the *same* :class:`CompiledProgram` (object
+    identity — the compile caches make equal programs identical), carry
+    the same ``result_cols``, and their dependencies merged into the same
+    nodes positionally.  A merged node's input is the segments' built rows
+    concatenated at **block granularity** (each segment zero-padded to a
+    multiple of ``block_rows``, with the padding masked per block via
+    ``GraphNode.block_valid``): every segment occupies whole blocks, so
+
+    - each segment's digits and per-block counters are bit-identical to
+      its standalone launch (same rows, same masking), and
+    - the per-segment counter split is an exact partition of the merged
+      launch's :class:`~repro.apc.stats.TracedStats`.
+
+    The hardware win is shared scheduling: one schedule replay sweeps all
+    segments' blocks through the bank as a single wave instead of one
+    drain per request.  Returns the merged graph plus, per source graph,
+    the ``{source node id: MergedSlice}`` mapping used for result slicing
+    and per-request stats attribution.
+
+    The pass is pure graph surgery — results of every source node are
+    bit-identical to running its graph alone, because node builds are
+    pure functions of dependency results and the executor masks padding
+    per block.
+    """
+    if block_rows < 1:
+        raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+    merged = ProgramGraph()
+    maps: list[dict[int, MergedSlice]] = [{} for _ in graphs]
+    levels: list[list[int]] = []
+    for g in graphs:
+        lv: list[int] = []
+        for n in g.nodes:
+            if n.block_valid is not None:
+                raise ValueError(
+                    "cannot coalesce a graph that already carries "
+                    "block_valid nodes (graphs merge once)")
+            lv.append(1 + max((lv[d] for d in n.deps), default=-1))
+        levels.append(lv)
+    max_level = max((max(lv, default=-1) for lv in levels), default=-1)
+    for level in range(max_level + 1):
+        groups: dict[tuple, list[tuple[int, int, GraphNode]]] = {}
+        for gi, g in enumerate(graphs):
+            for nid, node in enumerate(g.nodes):
+                if levels[gi][nid] != level:
+                    continue
+                if node.rows == 0:            # degenerate: keep solo
+                    key: tuple = ("solo", gi, nid)
+                else:
+                    dep_targets = tuple(maps[gi][d].node for d in node.deps)
+                    key = (id(node.compiled), dep_targets, node.result_cols)
+                groups.setdefault(key, []).append((gi, nid, node))
+        for members in groups.values():
+            _merge_group(merged, members, maps, block_rows)
+    return merged, maps
+
+
+def _merge_group(merged: ProgramGraph,
+                 members: list[tuple[int, int, "GraphNode"]],
+                 maps: list[dict[int, MergedSlice]],
+                 block_rows: int) -> None:
+    """Append one merged node for ``members`` and record their slices."""
+    solo = len(members) == 1
+    gi0, nid0, node0 = members[0]
+    dep_slices = [[maps[gi][d] for d in node.deps]
+                  for gi, nid, node in members]
+    deps = tuple(sl.node for sl in dep_slices[0])
+    segments = []                  # (build, dep_slices, rows, pad_rows)
+    block_valid: list[int] = []
+    res_lo = 0
+    total_pad = 0
+    mnid = len(merged.nodes)
+    for (gi, nid, node), dsl in zip(members, dep_slices):
+        if solo:
+            # un-padded launch: the pool masks the tail block itself, and
+            # every block of the launch belongs to this one source node
+            bv: tuple[int, ...] = ()
+            n_blocks = max(1, math.ceil(node.rows / block_rows))
+            pad_rows = node.rows
+        else:
+            bv = _block_split(node.rows, block_rows)
+            n_blocks = len(bv)
+            pad_rows = n_blocks * block_rows
+        maps[gi][nid] = MergedSlice(
+            node=mnid, rows=node.rows,
+            res_lo=res_lo, res_hi=res_lo + node.rows,
+            block_lo=len(block_valid),
+            block_hi=len(block_valid) + n_blocks)
+        segments.append((node.build, dsl, node.rows, pad_rows))
+        block_valid.extend(bv)
+        res_lo += node.rows
+        total_pad += pad_rows
+
+    # a solo segment whose deps are themselves whole (un-merged) nodes can
+    # reuse the original build untouched — the sequential path stays
+    # zero-overhead through coalescing
+    plain_deps = solo and all(
+        sl.res_lo == 0 and sl.rows == sl.res_hi for sl in dep_slices[0])
+
+    if plain_deps:
+        build = node0.build
+    else:
+        def build(*dep_results, _segments=segments):
+            parts = []
+            for seg_build, dsl, rows, pad_rows in _segments:
+                args = [dep_results[j][sl.res_lo:sl.res_hi]
+                        for j, sl in enumerate(dsl)]
+                arr = seg_build(*args)
+                if pad_rows > arr.shape[0]:
+                    arr = jnp.pad(jnp.asarray(arr, jnp.int8),
+                                  ((0, pad_rows - arr.shape[0]), (0, 0)))
+                parts.append(arr)
+            return parts[0] if len(parts) == 1 else \
+                jnp.concatenate(parts, axis=0)
+
+    label = node0.label if solo else \
+        f"{node0.label or 'node'}+{len(members) - 1}"
+    merged.add(node0.compiled, rows=total_pad, build=build, deps=deps,
+               result_cols=node0.result_cols, label=label,
+               block_valid=tuple(block_valid) if not solo else None)

@@ -45,8 +45,9 @@ from .mac import (compile_mac_tiled, decode_signed_digits_jnp,
                   mac_acc_width, matmul_mac_rows)
 from .runtime import Runtime
 
-__all__ = ["APLinear", "APServeContext", "ap_moe_dispatch", "ap_serving",
-           "current_ap_context", "N_MASKED_MAC"]
+__all__ = ["APLinear", "APServeContext", "APSink", "ap_moe_dispatch",
+           "ap_serving", "ap_request_scope", "current_ap_context",
+           "N_MASKED_MAC"]
 
 # compare-key mask width of the MAC sweeps: 3 LUT columns + 1 weight
 # predicate column (what the Table XI matchline model charges per compare)
@@ -132,6 +133,78 @@ class APLinear:
         return call.decode(res, s).astype(x.dtype)
 
 
+class APSink:
+    """Per-request aggregation target: one :class:`APStats` plus the
+    occupancy-model totals (makespan/sequential cycles and ns) and graph
+    counts a request accumulates across its AP-served projections.
+
+    A sequential :class:`APServeContext` owns one default sink; the
+    continuous-batching path (``serve/batcher.py``) gives every in-flight
+    request its own sink via :func:`ap_request_scope`, so many requests can
+    share one context (and one merged graph run) while keeping bit-exact
+    per-request accounting.
+    """
+
+    def __init__(self, radix: int = 3):
+        self.radix = radix
+        self.reset()
+
+    def reset(self) -> None:
+        self.stats = APStats(radix=self.radix)
+        self.makespan_cycles = 0
+        self.sequential_cycles = 0
+        self.makespan_ns = 0.0
+        self.sequential_ns = 0.0
+        self.n_graphs = 0
+        self.n_programs = 0
+        # deferred counter attributions: (traced, compiled, n_rows, label).
+        # The batcher defers the device->host counter sync so the host can
+        # encode wave k+1 while wave k's launches drain; flush() settles
+        # them into ``stats`` (report() flushes implicitly).
+        self._deferred: list[tuple] = []
+
+    def defer(self, traced, compiled, n_rows: int, label: str = "") -> None:
+        """Queue one traced-counter attribution without syncing the device."""
+        self._deferred.append((traced, compiled, n_rows, label))
+
+    def flush(self) -> None:
+        """Settle deferred attributions into ``stats`` (host sync)."""
+        from .stats import accumulate
+        pend, self._deferred = self._deferred, []
+        for traced, compiled, n_rows, label in pend:
+            accumulate(self.stats, traced, compiled, n_rows, label=label)
+
+    def add_report(self, report: dict) -> None:
+        """Fold one graph run's occupancy report into the totals."""
+        self.makespan_cycles += report["makespan_cycles"]
+        self.sequential_cycles += report["sequential_cycles"]
+        self.makespan_ns += report["makespan_ns"]
+        self.sequential_ns += report["sequential_ns"]
+        self.n_graphs += 1
+        self.n_programs += report["n_nodes"]
+
+    def report(self, n_masked: int = N_MASKED_MAC) -> dict:
+        """Aggregated per-request accounting: functional-simulator counters
+        + Table XI energy + graph-scheduler occupancy."""
+        self.flush()
+        rep = energy_from_stats(self.stats, n_masked=n_masked)
+        return {
+            "write_cycles": self.stats.n_write_cycles,
+            "compare_cycles": self.stats.n_compare_cycles,
+            "sets": int(self.stats.sets),
+            "resets": int(self.stats.resets),
+            "energy_write_j": rep.write_energy_j,
+            "energy_compare_j": rep.compare_energy_j,
+            "energy_total_j": rep.total_j,
+            "makespan_cycles": self.makespan_cycles,
+            "sequential_cycles": self.sequential_cycles,
+            "makespan_ns": self.makespan_ns,
+            "sequential_ns": self.sequential_ns,
+            "n_graphs": self.n_graphs,
+            "n_programs": self.n_programs,
+        }
+
+
 class APServeContext:
     """Per-request AP serving state: runtime + aggregated stats/energy.
 
@@ -155,16 +228,45 @@ class APServeContext:
         # feeding fresh arrays per request cannot grow it without bound
         self._linears: dict = {}
         self._max_linears = 64
-        self.reset()
+        self._default_sink = APSink(radix=self.radix)
 
     def reset(self) -> None:
-        self.stats = APStats(radix=self.radix)
-        self.makespan_cycles = 0
-        self.sequential_cycles = 0
-        self.makespan_ns = 0.0
-        self.sequential_ns = 0.0
-        self.n_graphs = 0
-        self.n_programs = 0
+        self._default_sink.reset()
+
+    def _sink(self) -> APSink:
+        scope = _AP_SCOPE.get()
+        return self._default_sink if scope is None else scope[0]
+
+    # Aggregates read the *active* sink, so engine/report code written for
+    # the sequential one-request-per-context contract keeps working both
+    # standalone and inside an ap_request_scope.
+    @property
+    def stats(self) -> APStats:
+        return self._sink().stats
+
+    @property
+    def makespan_cycles(self) -> int:
+        return self._sink().makespan_cycles
+
+    @property
+    def sequential_cycles(self) -> int:
+        return self._sink().sequential_cycles
+
+    @property
+    def makespan_ns(self) -> float:
+        return self._sink().makespan_ns
+
+    @property
+    def sequential_ns(self) -> float:
+        return self._sink().sequential_ns
+
+    @property
+    def n_graphs(self) -> int:
+        return self._sink().n_graphs
+
+    @property
+    def n_programs(self) -> int:
+        return self._sink().n_programs
 
     # -- projection cache ---------------------------------------------------
 
@@ -211,15 +313,17 @@ class APServeContext:
     # -- execution + aggregation --------------------------------------------
 
     def run_graph(self, graph: ProgramGraph):
+        scope = _AP_SCOPE.get()
+        if scope is not None and scope[1] is not None:
+            # batched serving: hand the graph to the wave merger, which
+            # coalesces it with the other in-flight requests' graphs and
+            # settles this request's sink from its slice of the merged run
+            return scope[1].run_graph(self, graph, scope[0])
+        sink = self._default_sink if scope is None else scope[0]
         with trace.span("serve.graph", cat="serve", n_nodes=len(graph),
-                        graph_index=self.n_graphs):
-            res = self.runtime.run_graph(graph, stats=self.stats)
-        self.makespan_cycles += res.report["makespan_cycles"]
-        self.sequential_cycles += res.report["sequential_cycles"]
-        self.makespan_ns += res.report["makespan_ns"]
-        self.sequential_ns += res.report["sequential_ns"]
-        self.n_graphs += 1
-        self.n_programs += res.report["n_nodes"]
+                        graph_index=sink.n_graphs):
+            res = self.runtime.run_graph(graph, stats=sink.stats)
+        sink.add_report(res.report)
         return res
 
     def cache_stats(self) -> dict:
@@ -238,25 +342,12 @@ class APServeContext:
 
     def report(self, n_masked: int = N_MASKED_MAC) -> dict:
         """Aggregated per-request accounting: functional-simulator counters
-        + Table XI energy + graph-scheduler occupancy."""
-        rep = energy_from_stats(self.stats, n_masked=n_masked)
-        return {
-            "write_cycles": self.stats.n_write_cycles,
-            "compare_cycles": self.stats.n_compare_cycles,
-            "sets": int(self.stats.sets),
-            "resets": int(self.stats.resets),
-            "energy_write_j": rep.write_energy_j,
-            "energy_compare_j": rep.compare_energy_j,
-            "energy_total_j": rep.total_j,
-            "makespan_cycles": self.makespan_cycles,
-            "sequential_cycles": self.sequential_cycles,
-            "makespan_ns": self.makespan_ns,
-            "sequential_ns": self.sequential_ns,
-            "n_graphs": self.n_graphs,
-            "n_programs": self.n_programs,
-            "n_arrays_total": getattr(self.runtime.pool, "total_arrays",
-                                      self.runtime.pool.n_arrays),
-        }
+        + Table XI energy + graph-scheduler occupancy (of the active
+        sink — the default one outside :func:`ap_request_scope`)."""
+        rep = self._sink().report(n_masked=n_masked)
+        rep["n_arrays_total"] = getattr(self.runtime.pool, "total_arrays",
+                                        self.runtime.pool.n_arrays)
+        return rep
 
 
 # ---------------------------------------------------------------------------
@@ -276,7 +367,19 @@ def ap_moe_dispatch(ctx: APServeContext, x2d: jax.Array,
     graphs run: one with all experts' gate+up projections (2E independent
     tiled-MAC subgraphs, interleaved across the bank), one with the down
     projections after the float combine.  Returns [T, d_out].
+
+    Degenerate inputs short-circuit before any graph is built: empty
+    expert lists raise, and when no (token, expert) pair routes anywhere
+    (T == 0, or top-k == 0) the result is all-zeros and ``ctx.n_graphs``
+    does not move — an empty dispatch runs zero graphs, not two empty
+    ones.
     """
+    if not (len(w1_lins) == len(w3_lins) == len(w2_lins)):
+        raise ValueError(
+            f"expert list lengths disagree: w1={len(w1_lins)} "
+            f"w3={len(w3_lins)} w2={len(w2_lins)}")
+    if not w2_lins:
+        raise ValueError("ap_moe_dispatch needs at least one expert")
     t, k = expert_ids.shape
     n_out = w2_lins[0].n
     eids = np.asarray(expert_ids).reshape(-1)              # host dispatch
@@ -286,6 +389,8 @@ def ap_moe_dispatch(ctx: APServeContext, x2d: jax.Array,
         pair_idx = np.nonzero(eids == e)[0]
         if pair_idx.size:
             groups.append((e, pair_idx))
+    if not groups:                         # T == 0 or k == 0: nothing routed
+        return jnp.zeros((t, n_out), jnp.float32)
 
     x_int, s_x = ctx.quantize(x2d)
     g1 = ProgramGraph()
@@ -325,6 +430,24 @@ def ap_moe_dispatch(ctx: APServeContext, x2d: jax.Array,
 
 _AP_CTX: contextvars.ContextVar[APServeContext | None] = \
     contextvars.ContextVar("ap_serve_ctx", default=None)
+
+# (sink, merger | None): set per request by the continuous-batching path so
+# many requests can share one APServeContext without sharing accounting
+_AP_SCOPE: contextvars.ContextVar[tuple | None] = \
+    contextvars.ContextVar("ap_request_scope", default=None)
+
+
+@contextmanager
+def ap_request_scope(sink: APSink, merger=None):
+    """Route this (thread's) AP work into ``sink`` instead of the context's
+    default sink; with a ``merger`` (``serve.batcher.WaveMerger``), graph
+    runs additionally rendezvous with the other in-flight requests into one
+    row-concatenated merged graph per wave."""
+    token = _AP_SCOPE.set((sink, merger))
+    try:
+        yield sink
+    finally:
+        _AP_SCOPE.reset(token)
 
 
 def current_ap_context() -> APServeContext | None:

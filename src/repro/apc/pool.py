@@ -157,7 +157,8 @@ class ArrayPool:
 
     def run(self, arr: jax.Array, compiled: CompiledProgram, *,
             collect_stats: bool = False, interpret: bool | None = None,
-            kernel_variant: str | None = None, unroll: int | None = None
+            kernel_variant: str | None = None, unroll: int | None = None,
+            block_valid: tuple[int, ...] | None = None
             ) -> tuple[jax.Array, TracedStats | None]:
         """Stream [rows, cols] digit rows through the pool.
 
@@ -165,11 +166,33 @@ class ArrayPool:
         bit-identical to single-array :func:`~repro.apc.exec.execute` for
         every kernel variant; ``interpret``/``kernel_variant``/``unroll``
         default to the pool-level knobs, then the backend defaults.
+
+        ``block_valid`` marks a row-concatenated launch (see
+        :class:`~repro.apc.graph.GraphNode`): block ``b`` carries
+        ``block_valid[b]`` valid rows at its top, the rest is padding.
+        Padding rows are masked out of the counters exactly like an
+        ordinary launch's tail block, and the returned digit array is
+        compacted to the valid rows (``sum(block_valid)`` rows) — so each
+        segment's digits and per-block counters are bit-identical to
+        launching it alone.
         """
         n_rows, n_cols = arr.shape
         self.validate(compiled, n_cols=n_cols)
         interpret = self.interpret if interpret is None else interpret
         unroll = self.unroll if unroll is None else unroll
+        if block_valid is not None:
+            if n_rows == 0 or n_rows % self.rows:
+                raise ValueError(
+                    f"block_valid launches must be whole {self.rows}-row "
+                    f"blocks, got {n_rows} rows")
+            if len(block_valid) != n_rows // self.rows:
+                raise ValueError(
+                    f"block_valid has {len(block_valid)} entries for "
+                    f"{n_rows // self.rows} blocks")
+            if any(not 1 <= v <= self.rows for v in block_valid):
+                raise ValueError(
+                    f"block_valid entries must be in [1, {self.rows}], "
+                    f"got {block_valid}")
         if n_rows == 0:
             empty = jnp.zeros((1, 2 + HIST_BINS), jnp.int32)
             return (jnp.asarray(arr, jnp.int8),
@@ -211,7 +234,8 @@ class ArrayPool:
             for b in range(n_blocks):
                 lo = b * self.rows
                 block = arr[lo:min(lo + self.rows, n_rows)]
-                valid = block.shape[0]
+                valid = block.shape[0] if block_valid is None \
+                    else block_valid[b]
                 padded, _ = _pad_rows(block, self.rows)
                 if tr is not None:
                     w, a = divmod(b, self.n_arrays)

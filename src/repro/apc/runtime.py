@@ -89,7 +89,8 @@ class DevicePool(ArrayPool):
 
     def run(self, arr: jax.Array, compiled: CompiledProgram, *,
             collect_stats: bool = False, interpret: bool | None = None,
-            kernel_variant: str | None = None, unroll: int | None = None
+            kernel_variant: str | None = None, unroll: int | None = None,
+            block_valid: tuple[int, ...] | None = None
             ) -> tuple[jax.Array, TracedStats | None]:
         """Stream [rows, cols] digit rows through the device-spanning bank.
 
@@ -100,7 +101,12 @@ class DevicePool(ArrayPool):
         if self.mesh is None:
             return super().run(arr, compiled, collect_stats=collect_stats,
                                interpret=interpret,
-                               kernel_variant=kernel_variant, unroll=unroll)
+                               kernel_variant=kernel_variant, unroll=unroll,
+                               block_valid=block_valid)
+        if block_valid is not None:
+            raise NotImplementedError(
+                "row-concatenated (block_valid) launches run on the host "
+                "pool path; the shard_map route masks per-shard rows only")
         n_rows, n_cols = arr.shape
         self.validate(compiled, n_cols=n_cols)
         interpret = self.interpret if interpret is None else interpret
@@ -132,12 +138,21 @@ class DevicePool(ArrayPool):
 
 
 class GraphResult(dict):
-    """``{node_id: result array}`` plus the run's occupancy report."""
+    """``{node_id: result array}`` plus the run's occupancy report.
+
+    ``traced`` carries each node's per-block
+    :class:`~repro.apc.stats.TracedStats` when the run collected counters
+    (``stats`` given or ``collect_stats=True``) — the batching layer
+    splits these per request slice (:class:`~repro.apc.graph.MergedSlice`)
+    to attribute a shared wave's counters exactly.
+    """
 
     def __init__(self, results: dict[int, jax.Array],
-                 report: dict[str, float]):
+                 report: dict[str, float],
+                 traced: dict[int, "TracedStats | None"] | None = None):
         super().__init__(results)
         self.report = report
+        self.traced = traced or {}
 
 
 class Runtime:
@@ -207,13 +222,19 @@ class Runtime:
 
     def run_graph(self, graph: ProgramGraph, *,
                   stats: APStats | None = None,
-                  order: list[int] | None = None) -> GraphResult:
+                  order: list[int] | None = None,
+                  collect_stats: bool = False) -> GraphResult:
         """Execute the graph; returns every node's result keyed by node id.
 
         ``order`` overrides the default wavefront order with any valid
         topological linearization — results are bit-identical regardless
         (node builds are pure functions of dependency results), which the
         scheduler property tests pin down.
+
+        ``collect_stats=True`` collects per-node traced counters into
+        ``GraphResult.traced`` without aggregating them anywhere — the
+        serving batcher's route, which attributes each merged node's
+        counters to its per-request slices itself.
         """
         nodes = graph.nodes
         waves = graph.wavefronts()
@@ -224,7 +245,7 @@ class Runtime:
         done: set[int] = set()
         results: dict[int, jax.Array] = {}
         traced: list[tuple[int, TracedStats | None]] = []
-        collect = stats is not None
+        collect = stats is not None or collect_stats
         tracer = trace.current_tracer()
         wave_of = {nid: w for w, ws in enumerate(waves) for nid in ws}
         with trace.span("run_graph", cat="runtime", n_nodes=len(nodes),
@@ -271,7 +292,8 @@ class Runtime:
                             arr, node.compiled, collect_stats=collect,
                             interpret=self.interpret,
                             kernel_variant=self.kernel_variant,
-                            unroll=self.unroll)
+                            unroll=self.unroll,
+                            block_valid=node.block_valid)
                     results[nid] = node.result(out)
                     traced.append((nid, tr))
                     done.add(nid)
@@ -284,7 +306,8 @@ class Runtime:
                                n_rows=nodes[nid].rows,
                                label=nodes[nid].label or f"node{nid}")
             rec: list | None = [] if tracer is not None else None
-            res = GraphResult(results, self.makespan(graph, record=rec))
+            res = GraphResult(results, self.makespan(graph, record=rec),
+                              traced=dict(traced) if collect else None)
             if tracer is not None:
                 gspan.set(makespan_cycles=res.report["makespan_cycles"],
                           sequential_cycles=res.report["sequential_cycles"],

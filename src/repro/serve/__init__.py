@@ -1,1 +1,4 @@
-from .engine import Engine, ServeCfg  # noqa: F401
+from .batcher import (AdmissionCfg, AdmissionRejected,  # noqa: F401
+                      BatchServer, RequestHandle, WaveAborted, WaveMerger)
+from .engine import Engine, Request, ServeCfg  # noqa: F401
+from .queue import ClosedQueue, IterableQueue  # noqa: F401

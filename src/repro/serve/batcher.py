@@ -1,0 +1,493 @@
+"""Continuous-batching AP serving: merge in-flight requests into shared waves.
+
+The AP's batch axis is the pool's ROW axis: independent requests' token rows
+can share one schedule replay (`ArrayPool.run` streams row blocks through
+the bank either way), so serving requests one at a time leaves the bank
+under-occupied for no reason.  This module drives many step-granular
+:class:`~repro.serve.engine.Request` objects in lockstep *waves* — each wave
+advances every in-flight request by exactly one model step — and merges the
+AP graphs those steps emit into ONE row-concatenated
+:class:`~repro.apc.graph.ProgramGraph` per graph call
+(:func:`~repro.apc.graph.coalesce_graphs`).
+
+Bit-exactness contract: a request served through the batcher produces the
+same tokens AND the same per-request :class:`~repro.core.ap.APStats` as
+sequential `Engine.generate` serving.  Tokens because row concatenation is
+block-aligned (every request's rows land in their own kernel blocks, padded
+and masked exactly like a standalone tail block); stats because each merged
+node's per-block traced counters are an exact partition over the source
+requests (split by :class:`~repro.apc.graph.MergedSlice` block ranges) and
+the schedule-static compare/write cycles are charged per source node, just
+like a sequential run.
+
+Moving parts:
+
+- :class:`WaveMerger` — the per-wave rendezvous.  Every request thread's
+  ``ctx.run_graph`` (routed here by :func:`~repro.apc.layers.
+  ap_request_scope`) deposits its graph and double-waits on a barrier; the
+  elected leader coalesces, runs the merged graph once
+  (``collect_stats=True``), and splits results + counters per request.
+  Counter syncs are *deferred* into each request's
+  :class:`~repro.apc.layers.APSink` so the host encodes wave k+1 while
+  wave k's launches drain.
+- :class:`BatchServer` — submission queue (:class:`~repro.serve.queue.
+  IterableQueue`) + dispatcher thread + admission control.  Admission
+  prices a hypothetical wave (every active request's recorded per-step
+  node profile, plus the candidate's) with
+  :func:`~repro.apc.graph.graph_makespan` and admits only while the
+  makespan fits ``AdmissionCfg.max_wave_cycles`` (policy ``"queue"`` holds
+  the candidate back; ``"reject"`` fails it with
+  :class:`AdmissionRejected`).
+
+The lockstep design assumes the model's AP graph cadence is config-static
+(every request's step issues the same number of ``ctx.run_graph`` calls —
+true for the packed-ternary MLP stack, where each layer runs exactly two
+graphs).  A request that falls out of cadence breaks the barrier, which
+surfaces as :class:`WaveAborted` rather than a hang.
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from ..apc import trace
+from ..apc.graph import (MergedGraphView, ProgramGraph, coalesce_graphs,
+                         graph_makespan)
+from ..apc.layers import APSink, ap_request_scope, ap_serving
+from ..apc.metrics import get_registry
+from ..apc.stats import TracedStats
+from .engine import Engine, Request
+from .queue import ClosedQueue, IterableQueue
+
+__all__ = ["AdmissionCfg", "AdmissionRejected", "BatchServer",
+           "RequestHandle", "WaveAborted", "WaveMerger"]
+
+
+class WaveAborted(RuntimeError):
+    """A wave's rendezvous broke (a peer errored or fell out of cadence)."""
+
+
+class AdmissionRejected(RuntimeError):
+    """Admission control shed this request (policy='reject')."""
+
+
+def _never_build(*_a):   # shadow-graph nodes are priced, never executed
+    raise AssertionError("admission shadow graph is never run")
+
+
+class WaveMerger:
+    """Rendezvous that merges one wave's per-request graphs into one run.
+
+    ``n_slots`` request threads each call :meth:`run_graph` once per graph
+    call (after :meth:`bind`-ing their slot).  The call double-waits on a
+    shared barrier: after the first wait every slot's graph is deposited
+    and the elected leader coalesces + runs the merged graph; after the
+    second, every thread picks up its own result view, charges its sink
+    the standalone occupancy report of its OWN graph (identical numbers
+    to sequential serving), and defers its slice of the traced counters.
+    The barrier is reusable, so the same merger serves every graph call
+    of one wave.
+    """
+
+    def __init__(self, runtime, n_slots: int, *, timeout: float = 120.0):
+        self.runtime = runtime
+        self.n_slots = n_slots
+        self._barrier = threading.Barrier(n_slots, timeout=timeout)
+        self._tls = threading.local()
+        self._graphs: list[ProgramGraph | None] = [None] * n_slots
+        self._views: list[MergedGraphView | None] = [None] * n_slots
+        self._reports: list[dict | None] = [None] * n_slots
+        self._accums: list[list[tuple]] = [[] for _ in range(n_slots)]
+        self._run_error: BaseException | None = None
+        # per-slot, per-graph-call node profiles (compiled, rows, deps) —
+        # the admission oracle's raw material
+        self.profiles: list[list[list[tuple]]] = [[] for _ in range(n_slots)]
+        self.n_merged_runs = 0
+        self.merged_nodes = 0
+        self.source_nodes = 0
+
+    def bind(self, slot: int) -> None:
+        """Register the calling thread as ``slot`` for this wave."""
+        self._tls.slot = slot
+
+    def abort(self) -> None:
+        """Break the rendezvous (peers see :class:`WaveAborted`)."""
+        self._barrier.abort()
+
+    def run_graph(self, ctx, graph: ProgramGraph, sink: APSink):
+        slot = self._tls.slot
+        self._graphs[slot] = graph
+        self.profiles[slot].append(
+            [(n.compiled, n.rows, n.deps) for n in graph.nodes])
+        try:
+            if self._barrier.wait() == 0:        # all deposited; 0 leads
+                try:
+                    self._merge_and_run(ctx)
+                except BaseException as e:       # peers must not hang
+                    self._run_error = e
+            self._barrier.wait()                 # results ready
+        except threading.BrokenBarrierError as e:
+            raise WaveAborted("wave rendezvous broke") from e
+        if self._run_error is not None:
+            raise WaveAborted("merged wave run failed") from self._run_error
+        view = self._views[slot]
+        sink.add_report(self._reports[slot])
+        for acc in self._accums[slot]:
+            sink.defer(*acc)
+        self._graphs[slot] = None
+        return view
+
+    def _merge_and_run(self, ctx) -> None:
+        graphs = [g for g in self._graphs]
+        if any(g is None for g in graphs):       # pragma: no cover
+            raise RuntimeError("wave slot missing a graph")
+        merged, maps = coalesce_graphs(graphs,
+                                       block_rows=self.runtime.pool.rows)
+        res = self.runtime.run_graph(merged, collect_stats=True)
+        self.n_merged_runs += 1
+        self.merged_nodes += len(merged)
+        self.source_nodes += sum(len(g) for g in graphs)
+        for slot, g in enumerate(graphs):
+            m = maps[slot]
+            # the standalone occupancy of this request's own graph: the
+            # exact numbers sequential serving would have recorded
+            self._reports[slot] = self.runtime.makespan(g)
+            self._views[slot] = MergedGraphView(res, m, self._reports[slot])
+            accums = []
+            for nid, node in enumerate(g.nodes):
+                sl = m[nid]
+                tr = res.traced.get(sl.node)
+                sliced = (TracedStats(
+                    tr.block_counts[sl.block_lo:sl.block_hi])
+                    if tr is not None else None)
+                accums.append((sliced, node.compiled, node.rows,
+                               node.label or f"node{nid}"))
+            self._accums[slot] = accums
+
+
+# ---------------------------------------------------------------------------
+# Admission control: price the next wave before letting a request in
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AdmissionCfg:
+    """Knobs gating how much concurrent work the bank accepts.
+
+    ``max_inflight`` caps lockstep width outright.  ``max_wave_cycles``
+    prices a hypothetical wave — every active request's recorded per-step
+    node profile plus the candidate's — with the occupancy model and
+    admits only while the makespan fits.  ``policy``: ``"queue"`` keeps
+    inadmissible candidates waiting, ``"reject"`` fails them with
+    :class:`AdmissionRejected`.
+    """
+    max_inflight: int = 8
+    max_wave_cycles: int | None = None
+    policy: str = "queue"          # "queue" | "reject"
+
+    def __post_init__(self):
+        if self.policy not in ("queue", "reject"):
+            raise ValueError(f"policy must be 'queue' or 'reject', "
+                             f"got {self.policy!r}")
+        if self.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+
+
+def wave_cost_cycles(profiles, *, n_arrays: int, rows_per_array: int,
+                     n_devices: int = 1) -> int:
+    """Occupancy-model makespan (cycles) of one wave built from per-request
+    step profiles (lists of per-graph-call ``(compiled, rows, deps)``
+    node lists)."""
+    shadow = ProgramGraph()
+    for prof in profiles:
+        for gnodes in prof:
+            base = len(shadow.nodes)
+            for compiled, rows, deps in gnodes:
+                shadow.add(compiled, rows=rows, build=_never_build,
+                           deps=tuple(base + d for d in deps))
+    if not len(shadow):
+        return 0
+    rep = graph_makespan(shadow, n_arrays=n_arrays,
+                         rows_per_array=rows_per_array, n_devices=n_devices)
+    return int(rep["makespan_cycles"])
+
+
+# ---------------------------------------------------------------------------
+# The server
+# ---------------------------------------------------------------------------
+
+class RequestHandle:
+    """Future for one submitted request."""
+
+    def __init__(self, prompts: np.ndarray, n_new: int, cross_embeds=None):
+        self.prompts = np.asarray(prompts)
+        self.n_new = int(n_new)
+        self.cross_embeds = cross_embeds
+        self.submitted_at = time.perf_counter()
+        self._event = threading.Event()
+        self._tokens: np.ndarray | None = None
+        self._error: BaseException | None = None
+        self._ap_report: dict | None = None
+        self.latency_ms: float | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        """Generated ids [B, n_new]; raises the request's failure, or
+        TimeoutError if it is not finished within ``timeout``."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not finished")
+        if self._error is not None:
+            raise self._error
+        return self._tokens
+
+    def ap_report(self, timeout: float | None = None) -> dict | None:
+        """Per-request AP accounting (None on the float path)."""
+        self.result(timeout)
+        return self._ap_report
+
+    def _finish(self, tokens=None, error: BaseException | None = None,
+                ap_report: dict | None = None) -> None:
+        self._tokens = tokens
+        self._error = error
+        self._ap_report = ap_report
+        self.latency_ms = 1e3 * (time.perf_counter() - self.submitted_at)
+        self._event.set()
+
+
+class _Active:
+    """Dispatcher-side state of one admitted request."""
+
+    def __init__(self, handle: RequestHandle, request: Request,
+                 sink: APSink | None):
+        self.handle = handle
+        self.request = request
+        self.sink = sink
+        self.profile: list[list[tuple]] | None = None   # last step's nodes
+        self.error: BaseException | None = None
+
+
+class BatchServer:
+    """Continuous-batching front end over one :class:`Engine`.
+
+    ``submit()`` enqueues; a dispatcher thread admits requests (admission
+    control above), then drives all in-flight requests in lockstep waves —
+    one model step per request per wave, AP graphs merged per graph call
+    via :class:`WaveMerger`.  Requests join mid-stream (continuous
+    batching: a new request's prefill steps ride the same waves as its
+    neighbors' decode steps) and retire as they finish.
+
+    With ``engine.ap_ctx is None`` the server still batches request
+    *scheduling* (queue, admission by ``max_inflight``, lockstep waves)
+    but each step runs the ordinary jitted float path with nothing to
+    merge.
+    """
+
+    def __init__(self, engine: Engine, *,
+                 admission: AdmissionCfg | None = None,
+                 queue_maxsize: int = 0, wave_timeout: float = 120.0):
+        self.engine = engine
+        self.admission = admission or AdmissionCfg()
+        self.wave_timeout = wave_timeout
+        self.queue = IterableQueue(queue_maxsize)
+        self._pending: deque[RequestHandle] = deque()
+        self._active: list[_Active] = []
+        self.n_waves = 0
+        self._closed = False
+        self._last_profile: list[list[tuple]] | None = None
+        self._dispatcher = threading.Thread(target=self._dispatch,
+                                            name="ap-serve-dispatch",
+                                            daemon=True)
+        self._dispatcher.start()
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, prompts: np.ndarray, n_new: int,
+               cross_embeds=None) -> RequestHandle:
+        """Enqueue one request; returns a :class:`RequestHandle` future."""
+        h = RequestHandle(prompts, n_new, cross_embeds)
+        try:
+            self.queue.put(h)
+        except ClosedQueue:
+            h._finish(error=RuntimeError("BatchServer is closed"))
+        return h
+
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting requests; drain in-flight + queued work."""
+        if not self._closed:
+            self._closed = True
+            self.queue.close()
+        if wait:
+            self._dispatcher.join()
+
+    def __enter__(self) -> "BatchServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(wait=True)
+
+    # -- dispatcher side ----------------------------------------------------
+
+    def _dispatch(self) -> None:
+        reg = get_registry()
+        while True:
+            self._drain_submissions(block=not (self._active
+                                               or self._pending))
+            self._admit(reg)
+            if not self._active:
+                if self.queue.closed and self.queue.qsize() == 0 \
+                        and not self._pending:
+                    return
+                if not self._pending:
+                    continue
+                # pending-but-inadmissible with nothing active cannot
+                # happen (an empty bank admits); defensive fall-through
+                continue                     # pragma: no cover
+            self._run_wave(reg)
+            self._retire(reg)
+
+    def _drain_submissions(self, block: bool) -> None:
+        while True:
+            try:
+                item = self.queue.get(timeout=None if block else 0)
+            except StopIteration:
+                return
+            except _queue.Empty:
+                return
+            self._pending.append(item)
+            block = False
+
+    def _admissible(self, reg) -> bool:
+        if len(self._active) >= self.admission.max_inflight:
+            return False
+        mwc = self.admission.max_wave_cycles
+        if mwc is None or self.engine.ap_ctx is None:
+            return True
+        cand = self._last_profile
+        if cand is None:                 # no profile yet: let it define one
+            return not self._active
+        profiles = [a.profile or cand for a in self._active] + [cand]
+        pool = self.engine.ap_ctx.runtime.pool
+        cost = wave_cost_cycles(
+            profiles, n_arrays=pool.n_arrays, rows_per_array=pool.rows,
+            n_devices=getattr(pool, "n_devices", 1))
+        reg.gauge("serve.admission_wave_cycles").set(cost)
+        return cost <= mwc
+
+    def _admit(self, reg) -> None:
+        while self._pending:
+            if self._admissible(reg):
+                h = self._pending.popleft()
+                try:
+                    sink = (APSink(radix=self.engine.ap_ctx.radix)
+                            if self.engine.ap_ctx is not None else None)
+                    req = self.engine.new_request(h.prompts, h.n_new,
+                                                  h.cross_embeds)
+                except Exception as e:       # bad request: fail just it
+                    h._finish(error=e)
+                    continue
+                self._active.append(_Active(h, req, sink))
+                reg.counter("serve.admitted").inc()
+            elif self.admission.policy == "reject":
+                h = self._pending.popleft()
+                h._finish(error=AdmissionRejected(
+                    "admission control: bank saturated "
+                    f"(inflight={len(self._active)}, "
+                    f"max_inflight={self.admission.max_inflight}, "
+                    f"max_wave_cycles={self.admission.max_wave_cycles})"))
+                reg.counter("serve.rejected").inc()
+            else:
+                break                        # policy=queue: wait
+        reg.gauge("serve.inflight").set(len(self._active))
+        reg.gauge("serve.queued").set(len(self._pending))
+
+    def _run_wave(self, reg) -> None:
+        stepping = [a for a in self._active if not a.request.done]
+        if not stepping:
+            return
+        t0 = time.perf_counter()
+        ctx = self.engine.ap_ctx
+        with trace.span("serve.wave", cat="serve", wave=self.n_waves,
+                        width=len(stepping)):
+            if ctx is None:
+                for act in stepping:
+                    self._step_float(act)
+            else:
+                # a lone request still goes through the merger (Barrier(1)
+                # passes immediately): one code path, and the wave records
+                # the step profile the admission oracle prices with
+                merger = WaveMerger(ctx.runtime, len(stepping),
+                                    timeout=self.wave_timeout)
+                threads = [threading.Thread(
+                    target=self._step_merged,
+                    args=(act, ctx, merger, slot),
+                    name=f"ap-serve-w{self.n_waves}s{slot}", daemon=True)
+                    for slot, act in enumerate(stepping)]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+                for slot, act in enumerate(stepping):
+                    if act.error is None and merger.profiles[slot]:
+                        act.profile = merger.profiles[slot]
+                        self._last_profile = act.profile
+        wave_ms = 1e3 * (time.perf_counter() - t0)
+        reg.histogram("serve.wave_ms").observe(wave_ms)
+        for act in stepping:
+            if act.error is None and \
+                    act.request.pos > act.request.s_prompt:
+                reg.histogram("serve.decode_step_ms").observe(wave_ms)
+        self.n_waves += 1
+
+    def _step_float(self, act: _Active) -> None:
+        try:
+            with self.engine.mesh:
+                act.request.step()
+        except BaseException as e:
+            act.error = e
+
+    def _step_merged(self, act: _Active, ctx, merger: WaveMerger,
+                     slot: int) -> None:
+        try:
+            merger.bind(slot)
+            # worker threads start with a fresh context: enter the mesh and
+            # the AP hook themselves, route stats into this request's sink,
+            # and silence the (thread-unsafe) tracer — the dispatcher emits
+            # the wave/request spans single-threaded
+            with trace.disabled(), self.engine.mesh, ap_serving(ctx), \
+                    ap_request_scope(act.sink, merger):
+                act.request.step()
+        except BaseException as e:
+            act.error = e
+            merger.abort()                  # never strand the peers
+
+    def _retire(self, reg) -> None:
+        still = []
+        for act in self._active:
+            if act.error is not None:
+                act.handle._finish(error=act.error)
+                reg.counter("serve.failed").inc()
+            elif act.request.done:
+                rep = None
+                if act.sink is not None and act.sink.n_graphs > 0:
+                    act.sink.flush()        # settle deferred counters
+                    rep = act.sink.report()
+                    pool = self.engine.ap_ctx.runtime.pool
+                    rep["n_arrays_total"] = getattr(
+                        pool, "total_arrays", pool.n_arrays)
+                act.handle._finish(tokens=act.request.tokens(),
+                                   ap_report=rep)
+                reg.counter("serve.requests").inc()
+                reg.histogram("serve.request_ms").observe(
+                    act.handle.latency_ms)
+            else:
+                still.append(act)
+        self._active = still
+        reg.gauge("serve.inflight").set(len(self._active))

@@ -6,6 +6,19 @@ unequal prompt lengths are right-aligned with left-padding masks folded into
 the cache positions (simple token-stepped prefill: correctness-first; the
 dry-run's prefill cell lowers the parallel forward path).
 
+Serving is step-granular: :class:`Request` holds one request's cache/key/
+token state and advances ONE model step per :meth:`Request.step` call —
+prefill steps feed prompt tokens, the first generated token is sampled off
+the final prefill logits, and each decode step feeds the previous sample
+back.  :meth:`Engine.generate` drives a single request to completion;
+``serve.batcher.BatchServer`` drives many interleaved Requests so their AP
+graphs merge into shared waves.
+
+A request that generates ``n_new`` tokens runs exactly
+``s_prompt + n_new - 1`` model steps: the last sampled token is *returned*,
+never fed back, so there is no trailing decode step whose output is thrown
+away.
+
 AP-backed serving: constructing the engine with ``ap_ctx`` (an
 :class:`repro.apc.layers.APServeContext`) routes every packed-ternary MLP /
 MoE projection of the forward pass through the AP program-graph runtime —
@@ -36,6 +49,112 @@ class ServeCfg:
     seed: int = 0
 
 
+class Request:
+    """Step-granular state of one in-flight request.
+
+    Created via :meth:`Engine.new_request`; the caller owns the execution
+    context (mesh, ``ap_serving``, per-request AP sink) — this object only
+    sequences model steps:
+
+    - :meth:`prefill_step` x ``s_prompt`` — feed prompt token ``i`` at
+      position ``i``; the last one leaves the first-token logits held.
+    - :meth:`sample_first` — sample generated token 0 from those logits.
+    - :meth:`decode_step` x ``n_new - 1`` — feed the last sample at its
+      position, sample the next token.
+    - :meth:`step` — the batcher's uniform "advance one token" move:
+      dispatches to whichever of the above is due (the first-token sample
+      rides along with the final prefill step, so every step() is exactly
+      one model step).
+
+    Total model steps: ``s_prompt + n_new - 1`` for ``n_new >= 1``, zero
+    for ``n_new == 0``.
+    """
+
+    def __init__(self, engine: "Engine", prompts: np.ndarray, n_new: int,
+                 cross_embeds=None):
+        prompts = np.asarray(prompts)
+        if prompts.ndim != 2:
+            raise ValueError(f"prompts must be [B, S], got {prompts.shape}")
+        b, s_prompt = prompts.shape
+        if s_prompt == 0:
+            raise ValueError(
+                "empty prompt (s_prompt == 0): the engine needs at least "
+                "one prompt token to prefill before it can sample")
+        if n_new < 0:
+            raise ValueError(f"n_new must be >= 0, got {n_new}")
+        self.engine = engine
+        self.prompts = prompts
+        self.b = b
+        self.s_prompt = s_prompt
+        self.n_new = n_new
+        cross_len = cross_embeds.shape[1] if cross_embeds is not None else \
+            (16 if engine.cfg.enc_layers else 0)
+        self.cache = M.init_cache(engine.cfg, b, engine.serve.max_len,
+                                  cross_len=cross_len)
+        self.key = jax.random.PRNGKey(engine.serve.seed)
+        self.logits = None
+        self.tok = None
+        self.out: list[np.ndarray] = []
+        self.pos = 0                   # model steps taken so far
+        self.n_model_steps = 0
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.n_new
+
+    def step(self) -> bool:
+        """Advance one model step (+ any sampling it unlocks); True when
+        the request has produced all ``n_new`` tokens."""
+        if self.done:
+            raise RuntimeError("step() on a finished request")
+        if self.pos < self.s_prompt:
+            self.prefill_step()
+            if self.pos == self.s_prompt:
+                self.sample_first()
+        else:
+            self.decode_step()
+        return self.done
+
+    def prefill_step(self) -> None:
+        i = self.pos
+        if i >= self.s_prompt:
+            raise RuntimeError("prefill already complete")
+        eng = self.engine
+        self.logits, self.cache = eng._step(
+            eng.params, self.cache,
+            jnp.asarray(self.prompts[:, i], jnp.int32), jnp.int32(i))
+        self.pos += 1
+        self.n_model_steps += 1
+
+    def sample_first(self) -> None:
+        if self.out or self.pos != self.s_prompt:
+            raise RuntimeError("sample_first() wants exactly-finished "
+                               "prefill and no sampled tokens yet")
+        self.tok = self.engine._sample(self.logits, self.key)
+        self.out.append(np.asarray(self.tok))
+
+    def decode_step(self) -> None:
+        j = self.pos - self.s_prompt   # decode index, 0-based
+        if j < 0 or self.tok is None:
+            raise RuntimeError("decode_step() before prefill + first sample")
+        eng = self.engine
+        with trace.span(f"decode{j}", cat="serve", step=j):
+            self.logits, self.cache = eng._step(eng.params, self.cache,
+                                                self.tok, jnp.int32(self.pos))
+            self.key = jax.random.fold_in(self.key, j)
+            self.tok = eng._sample(self.logits, self.key)
+            self.out.append(np.asarray(self.tok))
+        self.pos += 1
+        self.n_model_steps += 1
+
+    def tokens(self) -> np.ndarray:
+        """Generated ids so far, [B, n_sampled] int32 (n_sampled == n_new
+        once :attr:`done`; [B, 0] when ``n_new == 0``)."""
+        if not self.out:
+            return np.zeros((self.b, 0), np.int32)
+        return np.stack(self.out, axis=1)
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, mesh, serve: ServeCfg,
                  ap_ctx=None):
@@ -56,16 +175,23 @@ class Engine:
     def _decode_step(self, params, cache, tokens, pos):
         return M.decode_step(self.cfg, params, cache, tokens, pos, self.mesh)
 
+    def new_request(self, prompts: np.ndarray, n_new: int,
+                    cross_embeds=None) -> Request:
+        """Validate + allocate the step-granular state of one request
+        (raises ValueError on an empty prompt or negative ``n_new``)."""
+        return Request(self, prompts, n_new, cross_embeds)
+
     def generate(self, prompts: np.ndarray, n_new: int,
                  cross_embeds=None) -> np.ndarray:
         """prompts [B, S_prompt] int32 (pad id 0 on the LEFT); returns
-        [B, n_new] generated ids."""
+        [B, n_new] generated ids ([B, 0] for ``n_new == 0``).
+
+        Runs exactly ``s_prompt + n_new - 1`` model steps (``n_new >= 1``);
+        the recorded ``last_latency`` buckets satisfy
+        ``prefill_ms + decode_ms + other_ms == request_ms``.
+        """
+        prompts = np.asarray(prompts)
         b, s_prompt = prompts.shape
-        cross_len = cross_embeds.shape[1] if cross_embeds is not None else \
-            (16 if self.cfg.enc_layers else 0)
-        cache = M.init_cache(self.cfg, b, self.serve.max_len,
-                             cross_len=cross_len)
-        key = jax.random.PRNGKey(self.serve.seed)
         if self.ap_ctx is not None:
             from ..apc.layers import ap_serving
             self.ap_ctx.reset()            # per-request aggregation
@@ -76,46 +202,53 @@ class Engine:
         self._trace_mark = (tracer.attribution_mark()
                             if tracer is not None else 0)
         reg = get_registry()
+        n_decode = max(0, n_new - 1)
         t_req = time.perf_counter()
-        decode_s = 0.0
         with self.mesh, ap_guard, \
                 trace.span("request", cat="serve", batch=b,
                            prompt_len=s_prompt, n_new=n_new,
                            ap=self.ap_ctx is not None):
-            # prefill: feed prompt tokens one step at a time
-            logits = None
-            with trace.span("prefill", cat="serve", steps=s_prompt):
-                for i in range(s_prompt):
-                    logits, cache = self._step(
-                        self.params, cache,
-                        jnp.asarray(prompts[:, i], jnp.int32), jnp.int32(i))
-                jax.block_until_ready(logits)
-            t_prefill = time.perf_counter()
-            out = []
-            tok = self._sample(logits, key)
-            for j in range(n_new):
-                out.append(np.asarray(tok))
-                t0 = time.perf_counter()
-                with trace.span(f"decode{j}", cat="serve", step=j):
-                    logits, cache = self._step(self.params, cache, tok,
-                                               jnp.int32(s_prompt + j))
-                    key = jax.random.fold_in(key, j)
-                    tok = self._sample(logits, key)
-                    jax.block_until_ready(tok)
-                step_s = time.perf_counter() - t0
-                decode_s += step_s
-                reg.histogram("serve.decode_step_ms").observe(1e3 * step_s)
-        request_s = time.perf_counter() - t_req
+            req = self.new_request(prompts, n_new, cross_embeds)
+            t_setup = time.perf_counter()
+            if n_new == 0:
+                # nothing to sample: zero model steps, empty [B, 0] result
+                t_prefill = t_sample = t_decode = t_setup
+            else:
+                with trace.span("prefill", cat="serve", steps=s_prompt):
+                    for _ in range(s_prompt):
+                        req.prefill_step()
+                    jax.block_until_ready(req.logits)
+                t_prefill = time.perf_counter()
+                req.sample_first()         # token 0, off prefill logits
+                t_sample = time.perf_counter()
+                for _ in range(n_decode):
+                    t0 = time.perf_counter()
+                    req.decode_step()      # appends -> token is host-synced
+                    reg.histogram("serve.decode_step_ms").observe(
+                        1e3 * (time.perf_counter() - t0))
+                t_decode = time.perf_counter()
+            out = req.tokens()
+        t_end = time.perf_counter()
+        setup_ms = 1e3 * (t_setup - t_req)
+        sample_ms = 1e3 * (t_sample - t_prefill)
+        finalize_ms = 1e3 * (t_end - t_decode)
+        # contiguous boundary timestamps: the three headline buckets
+        # partition [t_req, t_end], so they sum to request_ms exactly
         self.last_latency = {
-            "request_ms": 1e3 * request_s,
-            "prefill_ms": 1e3 * (t_prefill - t_req),
-            "decode_ms": 1e3 * decode_s,
-            "n_prefill_steps": s_prompt,
-            "n_decode_steps": n_new,
+            "request_ms": 1e3 * (t_end - t_req),
+            "prefill_ms": 1e3 * (t_prefill - t_setup),
+            "decode_ms": 1e3 * (t_decode - t_sample),
+            "other_ms": setup_ms + sample_ms + finalize_ms,
+            "setup_ms": setup_ms,
+            "sample_ms": sample_ms,
+            "finalize_ms": finalize_ms,
+            "n_prefill_steps": s_prompt if n_new else 0,
+            "n_decode_steps": n_decode if n_new else 0,
+            "n_model_steps": req.n_model_steps,
         }
         reg.counter("serve.requests").inc()
-        reg.histogram("serve.request_ms").observe(1e3 * request_s)
-        return np.stack(out, axis=1)
+        reg.histogram("serve.request_ms").observe(1e3 * (t_end - t_req))
+        return out
 
     def ap_report(self) -> dict | None:
         """Aggregated AP accounting of the last :meth:`generate` request:

@@ -158,3 +158,48 @@ def test_apc_bench_json_recorded_ap_runtime_rows():
         assert r["n_arrays_total"] == r["n_arrays"] * r["n_devices"]
         if r["n_arrays_total"] > 1:
             assert r["makespan_cycles"] < r["sequential_cycles"]
+
+
+@pytest.mark.slow
+def test_serve_bench_load_point_schema():
+    """One serve_bench load point end-to-end: the ap_serve row carries the
+    serving-curve schema and sane values."""
+    import os
+    bench_dir = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks")
+    sys.path.insert(0, bench_dir)
+    try:
+        from serve_bench import run_load_point
+    finally:
+        sys.path.remove(bench_dir)
+    row = run_load_point(8.0, 4, max_inflight=4, s_prompt=2, n_new=2)
+    keys = {"bench", "offered_rps", "achieved_rps", "p50_ms", "p99_ms",
+            "mean_ms", "n_requests", "max_inflight", "n_waves", "wall_s"}
+    assert keys <= set(row)
+    assert row["bench"] == "ap_serve"
+    assert row["achieved_rps"] > 0
+    assert 0 < row["p50_ms"] <= row["p99_ms"]
+    assert row["n_waves"] >= row["s_prompt"] + row["n_new"] - 1
+
+
+def test_apc_bench_json_recorded_ap_serve_rows():
+    """The RECORDED benchmarks/apc_bench.json must carry the ap_serve
+    serving trajectory (requests/sec + p50/p99 vs offered load)."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks", "apc_bench.json")
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("ap_serve", [])
+    assert rows, "apc_bench.json is missing the ap_serve trajectory"
+    assert len(rows) >= 2              # a curve, not a point
+    offered = [r["offered_rps"] for r in rows]
+    assert offered == sorted(offered)
+    for r in rows:
+        assert r["bench"] == "ap_serve"
+        assert r["achieved_rps"] > 0
+        assert 0 < r["p50_ms"] <= r["p99_ms"]
+        # open loop: achieved throughput cannot exceed what was offered
+        # by more than rounding
+        assert r["achieved_rps"] <= r["offered_rps"] * 1.05 + 0.5

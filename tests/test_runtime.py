@@ -449,6 +449,68 @@ def test_moe_ap_dispatch_runs_and_combines():
         ctx.report()["sequential_cycles"]
 
 
+def test_moe_ap_dispatch_empty_tokens_runs_no_graphs():
+    """ISSUE 7 satellite: T == 0 short-circuits — zero graphs, not two
+    empty ones, and no w2_lins[0] indexing before the guards."""
+    from repro.apc.layers import APLinear, ap_moe_dispatch
+    rng = np.random.default_rng(2)
+    ctx = _tiny_ctx(cols=96)
+    w1 = [APLinear.from_dense(rng.normal(0, .2, (8, 6)))]
+    w3 = [APLinear.from_dense(rng.normal(0, .2, (8, 6)))]
+    w2 = [APLinear.from_dense(rng.normal(0, .2, (6, 8)))]
+    out = ap_moe_dispatch(ctx, jnp.zeros((0, 8), jnp.float32),
+                          jnp.zeros((0, 2), jnp.int32),
+                          jnp.zeros((0, 2), jnp.float32), w1, w3, w2,
+                          jax.nn.silu)
+    assert out.shape == (0, 8)
+    assert ctx.n_graphs == 0
+    # top-k == 0 with tokens present: all-zero output, still no graphs
+    out = ap_moe_dispatch(ctx, jnp.ones((3, 8), jnp.float32),
+                          jnp.zeros((3, 0), jnp.int32),
+                          jnp.zeros((3, 0), jnp.float32), w1, w3, w2,
+                          jax.nn.silu)
+    assert out.shape == (3, 8) and not np.any(np.asarray(out))
+    assert ctx.n_graphs == 0
+
+
+def test_moe_ap_dispatch_empty_expert_lists_raise():
+    from repro.apc.layers import APLinear, ap_moe_dispatch
+    ctx = _tiny_ctx(cols=96)
+    x = jnp.ones((2, 8), jnp.float32)
+    ids = jnp.zeros((2, 1), jnp.int32)
+    gates = jnp.ones((2, 1), jnp.float32)
+    with pytest.raises(ValueError, match="at least one expert"):
+        ap_moe_dispatch(ctx, x, ids, gates, [], [], [], jax.nn.silu)
+    lin = APLinear.from_dense(np.random.default_rng(0).normal(size=(8, 6)))
+    with pytest.raises(ValueError, match="lengths disagree"):
+        ap_moe_dispatch(ctx, x, ids, gates, [lin], [lin, lin], [lin],
+                        jax.nn.silu)
+
+
+def test_moe_ap_dispatch_single_expert_routing():
+    """All tokens routed to one expert of several: graphs only carry the
+    populated expert and the combine matches the dense reference."""
+    from repro.apc.layers import APLinear, ap_moe_dispatch
+    rng = np.random.default_rng(5)
+    ctx = _tiny_ctx(cols=96)
+    E, d, ff, t = 3, 8, 6, 4
+    w1s = [rng.normal(0, .2, (d, ff)) for _ in range(E)]
+    w3s = [rng.normal(0, .2, (d, ff)) for _ in range(E)]
+    w2s = [rng.normal(0, .2, (ff, d)) for _ in range(E)]
+    w1 = [APLinear.from_dense(w) for w in w1s]
+    w3 = [APLinear.from_dense(w) for w in w3s]
+    w2 = [APLinear.from_dense(w) for w in w2s]
+    x = jnp.asarray(rng.normal(0, 1, (t, d)), jnp.float32)
+    ids = jnp.full((t, 1), 1, jnp.int32)        # everyone -> expert 1
+    gates = jnp.ones((t, 1), jnp.float32)
+    out = ap_moe_dispatch(ctx, x, ids, gates, w1, w3, w2, jax.nn.silu)
+    assert out.shape == (t, d)
+    assert np.isfinite(np.asarray(out)).all()
+    assert ctx.n_graphs == 2                    # one gate+up, one down
+    # the two graphs carry ONLY expert 1's projections (2 MACs, then 1)
+    assert ctx.n_programs > 0
+
+
 @pytest.mark.slow          # a full (tiny) engine request through the AP path
 def test_engine_ap_backed_request_report():
     from repro.configs import get_smoke_config

@@ -353,3 +353,35 @@ def test_engine_request_under_env_toggle_emits_valid_trace(monkeypatch):
     finally:
         monkeypatch.delenv(trace.TRACE_ENV)
         trace.reset_global_tracer()
+
+
+@pytest.mark.slow
+def test_generate_latency_buckets_sum_to_request_ms():
+    """ISSUE 7 satellite: prefill_ms + decode_ms + other_ms == request_ms
+    (first-token sampling and AP-context setup no longer fall outside
+    every bucket), and the sub-buckets partition other_ms."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import model as M
+    from repro.models.quant import quantize_model_params
+    from repro.serve.engine import Engine, ServeCfg
+    base = get_smoke_config("qwen3-0.6b")
+    cfg = base.with_(n_layers=1, d_model=16, d_ff=24, n_heads=2,
+                     n_kv_heads=2, head_dim=8, vocab=32,
+                     ternary=base.ternary.__class__(enabled=True))
+    mesh = make_smoke_mesh()
+    qparams = quantize_model_params(M.init_params(cfg, jax.random.PRNGKey(0)))
+    pool = apc.ArrayPool(n_arrays=4, rows=64, cols=64)
+    ctx = apc.APServeContext(apc.Runtime(pool), x_levels=7)
+    eng = Engine(cfg, qparams, mesh, ServeCfg(max_len=8), ap_ctx=ctx)
+    eng.generate(np.array([[3, 5]], dtype=np.int32), 3)
+    lat = eng.last_latency
+    assert lat["request_ms"] > 0
+    assert abs(lat["prefill_ms"] + lat["decode_ms"] + lat["other_ms"]
+               - lat["request_ms"]) <= 1e-6 * lat["request_ms"] + 1e-9
+    assert abs(lat["setup_ms"] + lat["sample_ms"] + lat["finalize_ms"]
+               - lat["other_ms"]) <= 1e-6 * lat["other_ms"] + 1e-9
+    assert lat["n_model_steps"] == 2 + 3 - 1
+    rep = eng.ap_report()
+    assert rep["latency"] is lat
