@@ -27,6 +27,10 @@ structural HBM-traffic/bytes arithmetic for the TPU roofline story).
    one-hot and one-hot+VLIW-packed bodies (interpret=False), across
    program classes and row counts, with the list scheduler's trip-count /
    group-width statistics per program.
+8. ap sparse: sparsity-compressed MAC programs + the weight-stationary
+   resident bank ("ap_sparse" trajectory) — schedule cycles and wall
+   clock vs weight zero-fraction (0.0 -> 0.9), streaming vs resident
+   dataflow, with the host-side row-encode cost of each.
 """
 from __future__ import annotations
 
@@ -423,6 +427,112 @@ def bench_ap_runtime(g_programs: int = 3, m: int = 6, k: int = 48,
     return results
 
 
+def bench_ap_sparse(m: int = 4, k: int = 40, n: int = 4, radix: int = 3,
+                    max_abs: int = 3, k_tile: int = 10,
+                    zero_fracs=(0.0, 0.3, 0.5, 0.7, 0.9),
+                    pool_rows: int = 16, n_arrays: int = 2,
+                    n_timing: int = 3,
+                    json_path: str | None = None) -> list[dict]:
+    """Sparsity-compressed MAC programs + weight-stationary resident bank
+    ("ap_sparse" trajectory).
+
+    For each weight zero-fraction (whole reduction columns zeroed, so the
+    pass pruning is exact) the same K-tiled matmul runs two dataflows:
+    streaming (weights re-encoded and re-uploaded per call) and resident
+    (digit plane pinned once into the pool's ResidentStore, calls slice
+    it).  Per row: schedule cycle counts pruned vs the dense baseline,
+    wall-clock per call for both dataflows, and the host-side row-encode
+    time each dataflow pays.  Bit-exactness streaming == resident == the
+    integer reference is asserted every run.
+    """
+    from repro.apc.mac import (assemble_mac_rows_jnp, encode_mac_rows_jnp,
+                               encode_mac_x_rows_jnp,
+                               encode_weight_digits_jnp)
+    results = []
+    rng = np.random.default_rng(21)
+    width = apc.mac_acc_width(radix, k, max_abs)
+    cols = apc.mac_layout(min(k_tile, k), width)["n_cols"]
+    dense = apc.compile_mac_tiled(radix, k, width, k_tile, max_cols=cols)
+    x = jnp.asarray(rng.integers(-max_abs, max_abs + 1, (m, k)), jnp.int32)
+    for zf in zero_fracs:
+        w = rng.integers(-1, 2, (k, n))
+        w[:, 0], w[:, 1] = 1, -1       # every live column keeps both sweeps
+        n_zero_k = round(zf * k)
+        w[rng.choice(k, size=n_zero_k, replace=False), :] = 0
+        sup = apc.mac_weight_support(w.T)
+        tiled = apc.compile_mac_tiled(radix, k, width, k_tile,
+                                      max_cols=cols, support=sup)
+        pool = apc.ArrayPool(n_arrays=n_arrays, rows=pool_rows, cols=cols)
+        wj = jnp.asarray(w, jnp.int8)
+        x_rows, w_rows = apc.mac.matmul_mac_rows(x, wj)
+        handle = pool.resident.pin(
+            f"bench:{zf}", apc.weight_digest(w.T),
+            lambda _w=wj: encode_weight_digits_jnp(_w.T))
+
+        def run_streaming():
+            return apc.run_mac_tiled(x_rows, w_rows, tiled, pool=pool)
+
+        def run_resident():
+            return apc.run_mac_tiled(x_rows, None, tiled, pool=pool,
+                                     resident=handle)
+
+        y_s = np.asarray(run_streaming())
+        y_r = np.asarray(run_resident())
+        assert np.array_equal(y_s, y_r)
+        want = np.asarray(x) @ w
+        assert np.array_equal(y_s.reshape(m, n), want)
+        us_s = _time(run_streaming, n=n_timing)
+        us_r = _time(run_resident, n=n_timing)
+
+        # host-side row-encode cost of each dataflow, in isolation: the
+        # streaming path digitizes x AND the weight plane every call, the
+        # resident path digitizes x and slices the pinned plane
+        def enc_streaming():
+            return encode_mac_rows_jnp(x_rows, w_rows, radix, width)
+
+        plane = handle.resolve()
+
+        def enc_resident():
+            wd = jnp.tile(plane, (x_rows.shape[0] // plane.shape[0], 1))
+            return assemble_mac_rows_jnp(
+                encode_mac_x_rows_jnp(x_rows, radix, width), wd, width)
+
+        enc_us_s = _time(enc_streaming, n=n_timing)
+        enc_us_r = _time(enc_resident, n=n_timing)
+        dense_w = tiled.dense_write_cycles or tiled.n_write_cycles
+        row = {"bench": "ap_sparse", "m": m, "k": k, "n": n,
+               "radix": radix, "acc_width": width, "k_tile": k_tile,
+               "cols_budget": cols, "n_arrays": n_arrays,
+               "zero_frac": round(zf, 2), "n_zero_k": n_zero_k,
+               "emitted_passes": tiled.n_emitted_passes,
+               "pruned_passes": tiled.n_pruned_passes,
+               "write_cycles": tiled.n_write_cycles,
+               "compare_cycles": tiled.n_compare_cycles,
+               "dense_write_cycles": dense.n_write_cycles,
+               "dense_compare_cycles": dense.n_compare_cycles,
+               "write_cycle_reduction": round(
+                   1 - tiled.n_write_cycles / dense_w, 4),
+               "us_streaming": round(us_s), "us_resident": round(us_r),
+               "encode_us_streaming": round(enc_us_s),
+               "encode_us_resident": round(enc_us_r),
+               "resident_hits": pool.resident.stats()["hits"]}
+        results.append(row)
+        print(f"ap_sparse_{m}x{k}x{n}_zf{zf},stream={row['us_streaming']}us,"
+              f"resident={row['us_resident']}us,"
+              f"writes={row['write_cycles']}/{row['dense_write_cycles']},"
+              f"reduction={row['write_cycle_reduction']}")
+    if json_path is not None and os.path.exists(json_path):
+        # read-modify-write like trace_overhead: refresh this trajectory
+        # without discarding the slow full-run results
+        with open(json_path) as f:
+            doc = json.load(f)
+        doc["ap_sparse"] = results
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"ap_sparse rows -> {json_path}")
+    return results
+
+
 def bench_trace_overhead(fn: str = "add", radix: int = 3, width: int = 20,
                          rows: int = 16384, n_timing: int = 5,
                          json_path: str | None = None) -> dict:
@@ -513,11 +623,13 @@ def main():
     n_dev = len(jax.devices())
     runtime_rows = bench_ap_runtime(
         n_devices_list=(1,) if n_dev == 1 else (1, n_dev))
+    sparse_rows = bench_ap_sparse()
     trace_row = bench_trace_overhead()
     with open(args.json, "w") as f:
         json.dump({"bench": "apc_vs_replay", "results": apc_rows,
                    "ap_kernel": kernel_rows, "ap_matmul": matmul_rows,
                    "ap_pool": pool_rows, "ap_runtime": runtime_rows,
+                   "ap_sparse": sparse_rows,
                    "trace_overhead": trace_row}, f, indent=2)
     print(f"apc bench JSON -> {args.json}")
 

@@ -83,12 +83,14 @@ from . import (caches as caches_mod, graph as graph_mod, ir,
                layers as layers_mod, lower, mac, metrics as metrics_mod,
                pool as pool_mod, runtime as runtime_mod, stats,
                trace as trace_mod)
-from .caches import cache_stats, clear_compile_caches
+from .caches import (ResidentError, ResidentEvicted, ResidentHandle,
+                     ResidentStale, ResidentStore, cache_stats,
+                     clear_compile_caches)
 from .exec import execute, execute_sharded, run
 from .graph import (CARRIED, FoldStage, GraphNode, ProgramGraph,
                     fold_stage_input, graph_makespan, mac_fold_plan)
-from .layers import (APLinear, APServeContext, ap_moe_dispatch, ap_serving,
-                     current_ap_context)
+from .layers import (APLinear, APServeContext, APSink, ap_moe_dispatch,
+                     ap_request_scope, ap_serving, current_ap_context)
 from .runtime import DevicePool, GraphResult, Runtime
 from .ir import (AffineCol, ApplyLUT, CompareWrite, ForDigit, Program,
                  RelCol, SetCol, ZeroCol, digit)
@@ -98,14 +100,17 @@ from .lower import (KERNEL_VARIANTS, CompiledProgram, PackedProgram, Step,
                     multiply_program, negate_program, pack_steps,
                     resolve_schedule, ripple_add_program,
                     ripple_sub_program)
-from .mac import (TiledMac, compile_mac, compile_mac_reduce,
-                  compile_mac_tiled, decode_mac_acc, decode_mac_acc_jnp,
+from .mac import (SUPPORT_DENSE, TiledMac, assemble_mac_rows_jnp,
+                  compile_mac, compile_mac_reduce, compile_mac_tiled,
+                  decode_mac_acc, decode_mac_acc_jnp,
                   decode_signed_digits_jnp, encode_mac_rows,
-                  encode_mac_rows_jnp, mac_acc_width, mac_layout,
-                  mac_program, mac_reduce_program, matmul_mac_rows)
+                  encode_mac_rows_jnp, encode_mac_x_rows_jnp,
+                  encode_weight_digits_jnp, mac_acc_width, mac_layout,
+                  mac_program, mac_reduce_program, mac_weight_support,
+                  matmul_mac_rows, weight_digest)
 from .metrics import MetricsRegistry, get_registry
-from .pool import ArrayPool, run_mac_tiled, run_pooled
-from .stats import TracedStats, accumulate, to_ap_stats
+from .pool import ArrayPool, resident_enabled, run_mac_tiled, run_pooled
+from .stats import TracedStats, accumulate, mac_sparsity, to_ap_stats
 from .trace import (Tracer, current_tracer, global_tracer,
                     reset_global_tracer, tracing, validate_chrome_trace)
 
@@ -116,11 +121,13 @@ __all__ = [
     "Tracer", "current_tracer", "global_tracer", "reset_global_tracer",
     "tracing", "validate_chrome_trace",
     "cache_stats", "clear_compile_caches",
+    "ResidentError", "ResidentEvicted", "ResidentHandle", "ResidentStale",
+    "ResidentStore",
     "execute", "execute_sharded", "run",
     "CARRIED", "FoldStage", "GraphNode", "ProgramGraph", "fold_stage_input",
     "graph_makespan", "mac_fold_plan",
-    "APLinear", "APServeContext", "ap_moe_dispatch", "ap_serving",
-    "current_ap_context",
+    "APLinear", "APServeContext", "APSink", "ap_moe_dispatch",
+    "ap_request_scope", "ap_serving", "current_ap_context",
     "DevicePool", "GraphResult", "Runtime",
     "AffineCol", "ApplyLUT", "CompareWrite", "ForDigit", "Program", "RelCol",
     "SetCol", "ZeroCol", "digit",
@@ -129,10 +136,13 @@ __all__ = [
     "elementwise_program", "lower_program", "multiply_program",
     "negate_program", "pack_steps", "resolve_schedule",
     "ripple_add_program", "ripple_sub_program",
-    "TiledMac", "compile_mac", "compile_mac_reduce", "compile_mac_tiled",
+    "SUPPORT_DENSE", "TiledMac", "assemble_mac_rows_jnp", "compile_mac",
+    "compile_mac_reduce", "compile_mac_tiled",
     "decode_mac_acc", "decode_mac_acc_jnp", "decode_signed_digits_jnp",
-    "encode_mac_rows", "encode_mac_rows_jnp", "mac_acc_width", "mac_layout",
-    "mac_program", "mac_reduce_program", "matmul_mac_rows",
-    "ArrayPool", "run_mac_tiled", "run_pooled",
-    "TracedStats", "accumulate", "to_ap_stats",
+    "encode_mac_rows", "encode_mac_rows_jnp", "encode_mac_x_rows_jnp",
+    "encode_weight_digits_jnp", "mac_acc_width", "mac_layout",
+    "mac_program", "mac_reduce_program", "mac_weight_support",
+    "matmul_mac_rows", "weight_digest",
+    "ArrayPool", "resident_enabled", "run_mac_tiled", "run_pooled",
+    "TracedStats", "accumulate", "mac_sparsity", "to_ap_stats",
 ]

@@ -39,8 +39,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core.energy import T_EVALUATE_NS, T_PRECHARGE_NS, T_WRITE_NS
+from .caches import ResidentHandle
 from .lower import CompiledProgram
-from .mac import TiledMac, encode_mac_rows_jnp, mac_layout
+from .mac import (TiledMac, assemble_mac_rows_jnp, encode_mac_rows_jnp,
+                  encode_mac_x_rows_jnp, mac_layout)
 
 T_COMPARE_NS = T_PRECHARGE_NS + T_EVALUATE_NS
 
@@ -108,6 +110,15 @@ class GraphNode:
     how independent requests share one schedule replay: their row
     segments ride the same launch while per-block counters stay an exact
     per-segment partition.
+
+    ``upload_cycles`` is the per-block operand-upload charge (one write
+    cycle per digit column that must be freshly written into the array
+    before the program sweeps; 0 keeps the historical model).  Resident
+    weight columns charge nothing here — that is the weight-stationary
+    win the occupancy model sees.  ``resident_key`` tags the node with
+    the ``(key, generation)`` of the resident plane it reads, so
+    :func:`coalesce_graphs` merges only launches that agree on the
+    resident bank contents.
     """
     compiled: CompiledProgram
     rows: int
@@ -116,6 +127,8 @@ class GraphNode:
     result_cols: tuple[int, int] | None = None
     label: str = ""
     block_valid: tuple[int, ...] | None = None
+    upload_cycles: int = 0
+    resident_key: tuple | None = None
 
     @property
     def cycles(self) -> int:
@@ -128,6 +141,16 @@ class GraphNode:
         return (self.compiled.n_compare_cycles * T_COMPARE_NS
                 + self.compiled.n_write_cycles * T_WRITE_NS)
 
+    @property
+    def block_cycles(self) -> int:
+        """Program replay + operand upload — the per-block duration the
+        occupancy model schedules with."""
+        return self.cycles + self.upload_cycles
+
+    @property
+    def block_cycles_ns(self) -> float:
+        return self.cycles_ns + self.upload_cycles * T_WRITE_NS
+
     def result(self, out: jax.Array) -> jax.Array:
         if self.result_cols is None:
             return out
@@ -138,19 +161,34 @@ class GraphNode:
 @dataclass
 class ProgramGraph:
     """Append-only DAG of program launches (acyclic by construction: a
-    node's ``deps`` may only reference already-added nodes)."""
+    node's ``deps`` may only reference already-added nodes).
+
+    ``meta`` carries builder-side accounting that is not derivable from
+    the nodes alone (sparsity pruning totals, resident hit/miss counts);
+    :meth:`repro.apc.layers.APServeContext.run_graph` folds it into the
+    active request sink."""
     nodes: list[GraphNode] = field(default_factory=list)
+    meta: dict = field(default_factory=dict)
 
     def __len__(self) -> int:
         return len(self.nodes)
+
+    def bump(self, key: str, n: int) -> None:
+        """Accumulate a ``meta`` counter."""
+        self.meta[key] = self.meta.get(key, 0) + n
 
     def add(self, compiled: CompiledProgram, *, rows: int,
             build: Callable[..., jax.Array], deps: tuple[int, ...] = (),
             result_cols: tuple[int, int] | None = None,
             label: str = "",
-            block_valid: tuple[int, ...] | None = None) -> int:
+            block_valid: tuple[int, ...] | None = None,
+            upload_cycles: int = 0,
+            resident_key: tuple | None = None) -> int:
         if rows < 0:
             raise ValueError(f"rows must be >= 0, got {rows}")
+        if upload_cycles < 0:
+            raise ValueError(f"upload_cycles must be >= 0, got "
+                             f"{upload_cycles}")
         nid = len(self.nodes)
         for d in deps:
             if not 0 <= d < nid:
@@ -159,7 +197,8 @@ class ProgramGraph:
                     f"already-added node (graphs are built in topological "
                     f"order)")
         self.nodes.append(GraphNode(compiled, rows, build, tuple(deps),
-                                    result_cols, label, block_valid))
+                                    result_cols, label, block_valid,
+                                    upload_cycles, resident_key))
         return nid
 
     def wavefronts(self) -> list[list[int]]:
@@ -193,7 +232,9 @@ class ProgramGraph:
     # -- K-tiled MAC as a subgraph ------------------------------------------
 
     def add_mac_tiled(self, x: jax.Array, w_ter: jax.Array, tiled: TiledMac,
-                      label: str = "") -> int:
+                      label: str = "", *,
+                      resident: ResidentHandle | None = None,
+                      charge_upload: bool = False) -> int:
         """Add one K-tiled ternary MAC (``ACC = sum_k w_k * x_k`` over
         ``x``/``w_ter`` [R, K]) as tile nodes + fold-stage nodes; returns
         the node id whose result is the [R, width] accumulator digit block.
@@ -201,25 +242,70 @@ class ProgramGraph:
         All tile nodes are mutually independent — across two added MACs the
         scheduler interleaves their tiles freely, which is exactly the
         program-level pipelining the runtime exists for.
+
+        ``resident`` (weight-stationary dataflow): a
+        :class:`~repro.apc.caches.ResidentHandle` whose ``[R_w, K]`` digit
+        plane replaces the weight-side encode in every tile build (``R_w``
+        must divide R; the plane is row-tiled, matching
+        :func:`~repro.apc.mac.matmul_mac_rows` ordering), and tile nodes
+        carry its ``(key, generation)`` as ``resident_key`` so coalescing
+        only merges launches that agree on the bank contents.  Staleness
+        is checked at build time (graph execution), raising rather than
+        reusing dead columns.
+
+        ``charge_upload=True`` prices operand uploads into the occupancy
+        model: streaming tile nodes charge one write cycle per x AND
+        weight digit column, resident tile nodes charge the x columns
+        only, reduce nodes their fresh partial columns.  The default
+        (False) keeps the historical upload-free model.
         """
         R, K = x.shape
         if K != tiled.K:
             raise ValueError(f"x has K={K}, tiled program compiled for "
                              f"K={tiled.K}")
+        if resident is not None:
+            rw, kw = resident.plane.shape
+            if kw != K or R % rw:
+                raise ValueError(
+                    f"resident plane is {rw}x{kw}, rows R={R} K={K} need "
+                    f"a [R_w, K] plane with R_w dividing R")
         radix, width = tiled.radix, tiled.width
+        rkey = None if resident is None else (resident.key,
+                                              resident.generation)
+        if tiled.support is not None:
+            self.bump("pruned_write_cycles", tiled.n_pruned_write_cycles)
+            self.bump("pruned_compare_cycles",
+                      tiled.n_pruned_compare_cycles)
+        self.bump("emitted_passes", tiled.n_emitted_passes)
+        self.bump("pruned_passes", tiled.n_pruned_passes)
         tile_ids: list[int] = []
         for t, ((lo, hi), prog) in enumerate(zip(tiled.tiles,
                                                  tiled.programs)):
-            base = mac_layout(hi - lo, width)["acc_base"]
+            kt = hi - lo
+            base = mac_layout(kt, width)["acc_base"]
 
-            def build_tile(*, _lo=lo, _hi=hi):
-                return encode_mac_rows_jnp(x[:, _lo:_hi], w_ter[:, _lo:_hi],
-                                           radix, width)
+            if resident is None:
+                def build_tile(*, _lo=lo, _hi=hi):
+                    return encode_mac_rows_jnp(x[:, _lo:_hi],
+                                               w_ter[:, _lo:_hi],
+                                               radix, width)
+            else:
+                def build_tile(*, _lo=lo, _hi=hi, _h=resident):
+                    wd = _h.resolve()[:, _lo:_hi]   # raises if stale
+                    if R // wd.shape[0] > 1:
+                        wd = jnp.tile(wd, (R // wd.shape[0], 1))
+                    return assemble_mac_rows_jnp(
+                        encode_mac_x_rows_jnp(x[:, _lo:_hi], radix, width),
+                        wd, width)
 
+            upload = 0
+            if charge_upload:
+                upload = kt * width + (0 if resident is not None else kt)
             tile_ids.append(self.add(
                 prog, rows=R, build=build_tile,
                 result_cols=(base, base + width),
-                label=f"{label}tile{t}[{lo}:{hi}]"))
+                label=f"{label}tile{t}[{lo}:{hi}]",
+                upload_cycles=upload, resident_key=rkey))
         last = tile_ids[0]
         for j, stage in enumerate(mac_fold_plan(tiled)):
             deps = tuple(last if p == CARRIED else tile_ids[p]
@@ -228,7 +314,9 @@ class ProgramGraph:
                 stage.prog, rows=R,
                 build=lambda *parts: fold_stage_input(list(parts)),
                 deps=deps, result_cols=(stage.out_lo, stage.out_hi),
-                label=f"{label}reduce{j}")
+                label=f"{label}reduce{j}",
+                upload_cycles=(len(stage.parts) * width if charge_upload
+                               else 0))
         return last
 
 
@@ -285,12 +373,12 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
                 break
             start = max(free[i], ready)
             start_ns = max(free_ns[i], ready_ns)
-            free[i] = start + nb * node.cycles
+            free[i] = start + nb * node.block_cycles
             end = max(end, free[i])
             # ns rides the SAME block assignment (Table-XI-timed rendering
             # of the cycle schedule), so makespan_ns <= sequential_ns by
             # the identical per-node wave bound
-            free_ns[i] = start_ns + nb * node.cycles_ns
+            free_ns[i] = start_ns + nb * node.block_cycles_ns
             end_ns = max(end_ns, free_ns[i])
             if record is not None:
                 record.append({"node": nid, "array": i, "blocks": nb,
@@ -300,8 +388,8 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
         finish.append(end)
         finish_ns.append(end_ns)
         waves = math.ceil(math.ceil(blocks / n_devices) / n_arrays)
-        seq += waves * node.cycles
-        seq_ns += waves * node.cycles_ns
+        seq += waves * node.block_cycles
+        seq_ns += waves * node.block_cycles_ns
     return {"makespan_cycles": max(finish, default=0),
             "sequential_cycles": seq,
             "makespan_ns": max(finish_ns, default=0.0),
@@ -423,7 +511,11 @@ def coalesce_graphs(graphs: list[ProgramGraph], *, block_rows: int
                     key: tuple = ("solo", gi, nid)
                 else:
                     dep_targets = tuple(maps[gi][d].node for d in node.deps)
-                    key = (id(node.compiled), dep_targets, node.result_cols)
+                    # residency is part of launch identity: only waves that
+                    # agree on the resident plane generation (and the
+                    # upload price) may share a schedule replay
+                    key = (id(node.compiled), dep_targets, node.result_cols,
+                           node.resident_key, node.upload_cycles)
                 groups.setdefault(key, []).append((gi, nid, node))
         for members in groups.values():
             _merge_group(merged, members, maps, block_rows)
@@ -492,4 +584,6 @@ def _merge_group(merged: ProgramGraph,
         f"{node0.label or 'node'}+{len(members) - 1}"
     merged.add(node0.compiled, rows=total_pad, build=build, deps=deps,
                result_cols=node0.result_cols, label=label,
-               block_valid=tuple(block_valid) if not solo else None)
+               block_valid=tuple(block_valid) if not solo else None,
+               upload_cycles=node0.upload_cycles,
+               resident_key=node0.resident_key)

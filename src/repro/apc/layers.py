@@ -40,9 +40,11 @@ from ..core.ap import APStats
 from ..core.energy import energy_from_stats
 from ..kernels.ternary_matmul.ref import quantize_ternary, unpack_ternary
 from . import trace
+from .caches import ResidentHandle, ResidentStore
 from .graph import ProgramGraph
 from .mac import (compile_mac_tiled, decode_signed_digits_jnp,
-                  mac_acc_width, matmul_mac_rows)
+                  encode_weight_digits_jnp, mac_acc_width,
+                  mac_weight_support, matmul_mac_rows, weight_digest)
 from .runtime import Runtime
 
 __all__ = ["APLinear", "APServeContext", "APSink", "ap_moe_dispatch",
@@ -74,15 +76,58 @@ class APLinear:
 
     ``w_ter`` [K, N] in {-1, 0, +1}, ``w_scale`` [N] float (absmean
     per-channel scale, as produced by :func:`quantize_ternary`).
+
+    ``sparse`` (default on) compiles the projection's MAC against the
+    weights' per-k digit support (:func:`~repro.apc.mac.
+    mac_weight_support`), pruning every add/sub sweep whose predicate
+    digit never occurs — bit-exact by construction, since the pruned
+    sweeps could not have matched any of this projection's rows.
+
+    ``store`` (weight-stationary dataflow): a
+    :class:`~repro.apc.caches.ResidentStore` to pin the weight digit
+    plane into at construction; every subsequent call slices the
+    resident plane instead of re-encoding/re-uploading weight columns
+    (:meth:`pin` attaches a store later — ``__call__`` auto-pins into
+    the serving context's pool store).
     """
 
     def __init__(self, w_ter: jax.Array, w_scale: jax.Array, *,
-                 radix: int = 3, label: str = ""):
+                 radix: int = 3, label: str = "",
+                 store: ResidentStore | None = None, sparse: bool = True):
         self.w_ter = jnp.asarray(w_ter, jnp.int8)
         self.w_scale = jnp.asarray(w_scale, jnp.float32)
         self.kp, self.n = self.w_ter.shape
         self.radix = radix
         self.label = label
+        self.sparse = sparse
+        wT = np.asarray(self.w_ter).T                  # [N, K'] row plane
+        self._support = mac_weight_support(wT)
+        self._digest = weight_digest(wT)
+        self._n_zero = int((wT == 0).sum())
+        self._n_weights = int(wT.size)
+        self._res_key = f"lin:{label}" if label else f"lin:{self._digest}"
+        self._store: ResidentStore | None = None
+        self._handle: ResidentHandle | None = None
+        if store is not None:
+            self.pin(store)
+
+    def _plane_fn(self) -> jax.Array:
+        # the ONE weight-side encode of the weight-stationary dataflow:
+        # runs on a pin miss only (bumps the mac.weight_encodes counter)
+        return encode_weight_digits_jnp(self.w_ter.T)
+
+    def pin(self, store: ResidentStore) -> ResidentHandle:
+        """Write this projection's weight digit plane into ``store``
+        (content-keyed get-or-put) and serve subsequent calls from it."""
+        self._store = store
+        self._handle = store.pin(self._res_key, self._digest,
+                                 self._plane_fn)
+        return self._handle
+
+    @property
+    def weight_sparsity(self) -> float:
+        """Measured zero fraction of the ternary weights."""
+        return self._n_zero / max(1, self._n_weights)
 
     @classmethod
     def from_packed(cls, packed: jax.Array, scale: jax.Array,
@@ -115,16 +160,44 @@ class APLinear:
         width = mac_acc_width(self.radix, self.kp, max_q)
         kt = k_tile if k_tile is not None else default_k_tile(max_cols,
                                                               width)
-        tiled = compile_mac_tiled(self.radix, self.kp, width,
-                                  min(kt, self.kp), max_cols=max_cols)
-        x_rows, w_rows = matmul_mac_rows(x_int, self.w_ter)   # [T*N, K']
+        tiled = compile_mac_tiled(
+            self.radix, self.kp, width, min(kt, self.kp), max_cols=max_cols,
+            support=self._support if self.sparse else None)
+        resident = None
+        if self._store is not None:
+            # re-pin (get-or-put): a hit returns the live handle with zero
+            # encode work, an eviction transparently re-encodes once
+            prev = self._handle
+            resident = self._store.pin(self._res_key, self._digest,
+                                       self._plane_fn)
+            self._handle = resident
+            graph.bump("resident_hits" if resident is prev
+                       else "resident_misses", 1)
+        else:
+            graph.bump("resident_misses", 1)
+        graph.bump("weight_zeros", self._n_zero)
+        graph.bump("weight_digits", self._n_weights)
+        if resident is None:
+            x_rows, w_rows = matmul_mac_rows(x_int, self.w_ter)  # [T*N, K']
+        else:
+            # weight rows come from the resident plane (same matmul_mac_rows
+            # ordering: row t*N + n holds w_ter.T[n]) — never materialized
+            x_rows, w_rows = jnp.repeat(x_int, self.n, axis=0), None
         node = graph.add_mac_tiled(x_rows, w_rows, tiled,
                                    label=f"{self.label}:" if self.label
-                                   else "")
+                                   else "", resident=resident,
+                                   charge_upload=True)
         return APCall(node, self.radix, t, self.n, self.w_scale)
 
     def __call__(self, x: jax.Array, ctx: "APServeContext") -> jax.Array:
-        """Standalone projection: quantize, one-node graph, run, decode."""
+        """Standalone projection: quantize, one-node graph, run, decode.
+
+        Auto-pins the weights into the context pool's resident store on
+        first use, so repeat calls are weight-stationary."""
+        if self._store is None:
+            store = getattr(ctx.runtime.pool, "resident", None)
+            if store is not None:
+                self.pin(store)
         graph = ProgramGraph()
         x_int, s = ctx.quantize(x)
         call = self.add_call(graph, x_int, max_cols=ctx.max_cols,
@@ -145,6 +218,13 @@ class APSink:
     per-request accounting.
     """
 
+    # builder-side meta counters folded from ProgramGraph.meta: sparsity
+    # pruning totals + resident-bank hit tracking + measured weight zeros
+    META_KEYS = ("pruned_write_cycles", "pruned_compare_cycles",
+                 "emitted_passes", "pruned_passes",
+                 "resident_hits", "resident_misses",
+                 "weight_zeros", "weight_digits")
+
     def __init__(self, radix: int = 3):
         self.radix = radix
         self.reset()
@@ -157,6 +237,8 @@ class APSink:
         self.sequential_ns = 0.0
         self.n_graphs = 0
         self.n_programs = 0
+        for k in self.META_KEYS:
+            setattr(self, k, 0)
         # deferred counter attributions: (traced, compiled, n_rows, label).
         # The batcher defers the device->host counter sync so the host can
         # encode wave k+1 while wave k's launches drain; flush() settles
@@ -183,11 +265,18 @@ class APSink:
         self.n_graphs += 1
         self.n_programs += report["n_nodes"]
 
+    def add_meta(self, meta: dict) -> None:
+        """Fold one graph's builder-side meta (sparsity + residency)."""
+        for k in self.META_KEYS:
+            setattr(self, k, getattr(self, k) + meta.get(k, 0))
+
     def report(self, n_masked: int = N_MASKED_MAC) -> dict:
         """Aggregated per-request accounting: functional-simulator counters
-        + Table XI energy + graph-scheduler occupancy."""
+        + Table XI energy + graph-scheduler occupancy + sparsity/residency
+        attribution (pruned vs emitted passes, resident-bank hit rate)."""
         self.flush()
         rep = energy_from_stats(self.stats, n_masked=n_masked)
+        total_pins = self.resident_hits + self.resident_misses
         return {
             "write_cycles": self.stats.n_write_cycles,
             "compare_cycles": self.stats.n_compare_cycles,
@@ -202,6 +291,16 @@ class APSink:
             "sequential_ns": self.sequential_ns,
             "n_graphs": self.n_graphs,
             "n_programs": self.n_programs,
+            "pruned_write_cycles": self.pruned_write_cycles,
+            "pruned_compare_cycles": self.pruned_compare_cycles,
+            "emitted_passes": self.emitted_passes,
+            "pruned_passes": self.pruned_passes,
+            "resident_hits": self.resident_hits,
+            "resident_misses": self.resident_misses,
+            "resident_hit_rate": (self.resident_hits / total_pins
+                                  if total_pins else 0.0),
+            "weight_sparsity": (self.weight_zeros / self.weight_digits
+                                if self.weight_digits else 0.0),
         }
 
 
@@ -270,26 +369,33 @@ class APServeContext:
 
     # -- projection cache ---------------------------------------------------
 
+    def _resident_store(self) -> ResidentStore | None:
+        return getattr(self.runtime.pool, "resident", None)
+
     def linear(self, key, packed: jax.Array, scale: jax.Array,
                label: str = "") -> APLinear:
-        """Cached APLinear for packed weights (one unpack per weight)."""
+        """Cached APLinear for packed weights (one unpack per weight);
+        weights pin resident into the pool's bank at construction."""
         ck = (key, id(packed))
         hit = self._linears.get(ck)
         if hit is None:
             hit = (packed, APLinear.from_packed(packed, scale,
                                                 radix=self.radix,
-                                                label=label))
+                                                label=label,
+                                                store=self._resident_store()))
             self._cache_put(ck, hit)       # pin packed so id() stays valid
         return hit[1]
 
     def expert_linears(self, key, w_stack: jax.Array,
                        label: str = "") -> list[APLinear]:
-        """Cached per-expert APLinears from stacked dense [E, K, N]."""
+        """Cached per-expert APLinears from stacked dense [E, K, N];
+        every expert's weights pin resident at construction."""
         ck = (key, id(w_stack))
         hit = self._linears.get(ck)
         if hit is None:
             lins = [APLinear.from_dense(w_stack[e], radix=self.radix,
-                                        label=f"{label}e{e}")
+                                        label=f"{label}e{e}",
+                                        store=self._resident_store())
                     for e in range(w_stack.shape[0])]
             hit = (w_stack, lins)
             self._cache_put(ck, hit)
@@ -314,12 +420,15 @@ class APServeContext:
 
     def run_graph(self, graph: ProgramGraph):
         scope = _AP_SCOPE.get()
+        sink = self._default_sink if scope is None else scope[0]
+        # builder-side meta (sparsity pruning, resident hits) folds here so
+        # both the sequential and the wave-merged route account it
+        sink.add_meta(graph.meta)
         if scope is not None and scope[1] is not None:
             # batched serving: hand the graph to the wave merger, which
             # coalesces it with the other in-flight requests' graphs and
             # settles this request's sink from its slice of the merged run
             return scope[1].run_graph(self, graph, scope[0])
-        sink = self._default_sink if scope is None else scope[0]
         with trace.span("serve.graph", cat="serve", n_nodes=len(graph),
                         graph_index=sink.n_graphs):
             res = self.runtime.run_graph(graph, stats=sink.stats)
@@ -332,13 +441,17 @@ class APServeContext:
         the pool's uploaded-schedule store, and the per-context APLinear
         cache — the numbers to watch in a long-running serve.Engine."""
         from .caches import cache_stats
-        return {
+        out = {
             "compile": cache_stats(),
             "pool_schedules": len(self.runtime.pool._schedules),
             "pool_schedules_max": self.runtime.pool._max_schedules,
             "linears": len(self._linears),
             "linears_max": self._max_linears,
         }
+        store = self._resident_store()
+        if store is not None:
+            out["resident"] = store.stats()
+        return out
 
     def report(self, n_masked: int = N_MASKED_MAC) -> dict:
         """Aggregated per-request accounting: functional-simulator counters

@@ -46,6 +46,7 @@ exact sum of the tile programs plus the reduction programs.
 from __future__ import annotations
 
 import functools
+import hashlib
 from typing import NamedTuple
 
 import jax
@@ -59,9 +60,47 @@ from ..core.nonblocked import build_lut_nonblocked
 from . import trace
 from .ir import ApplyLUT, ForDigit, Op, Program, SetCol, ZeroCol, digit
 from .lower import CompiledProgram, compile_program
+from .metrics import get_registry
 
 # weight trit encoding: stored digit = trit + 1 (valid for any radix >= 3)
 W_MINUS, W_ZERO, W_PLUS = 0, 1, 2
+
+# support-mask bits: bit v is set iff weight digit value v occurs in the
+# column.  A dense column has all three; a zero trit contributes only
+# bit W_ZERO, which predicates no sweep.
+SUPPORT_DENSE = (1 << W_MINUS) | (1 << W_ZERO) | (1 << W_PLUS)
+
+
+def mac_weight_support(w_ter) -> tuple[int, ...]:
+    """Per-k digit-support bitmasks for a ternary weight block.
+
+    ``w_ter`` is any array whose LAST axis is K (``[K]``, ``[N, K]``, ...);
+    leading axes are the CAM rows that will share the program, so the mask
+    for position k is the union of digit values seen across them.  Bit
+    ``v`` (v = trit + 1) set means some row holds that digit at k — the
+    add sweep can fire only if bit :data:`W_PLUS` is set, the subtract
+    sweep only if bit :data:`W_MINUS` is.  Host-syncs ``w_ter``.
+    """
+    w = np.asarray(w_ter)
+    if w.ndim == 0:
+        raise ValueError("w_ter must have a K axis")
+    d = (w.astype(np.int64) + 1).reshape(-1, w.shape[-1])
+    if d.size and (d.min() < 0 or d.max() > 2):
+        raise ValueError("weights must be ternary in {-1, 0, +1}")
+    out = np.zeros(w.shape[-1], np.int64)
+    for v in (W_MINUS, W_ZERO, W_PLUS):
+        out |= (d == v).any(axis=0) << v
+    return tuple(int(m) for m in out)
+
+
+def weight_digest(w_ter) -> str:
+    """Content hash of a ternary weight block (canonical int8 digits +
+    shape) — the identity key for sparsity-pruned programs and
+    resident-bank handles."""
+    w = np.ascontiguousarray(np.asarray(w_ter, np.int8) + 1)
+    h = hashlib.sha1(repr(w.shape).encode())
+    h.update(w.tobytes())
+    return h.hexdigest()[:16]
 
 
 # ---------------------------------------------------------------------------
@@ -94,7 +133,8 @@ def mac_acc_width(radix: int, K: int, max_abs: int) -> int:
 def mac_program(lut_add: LUT, lut_rsub: LUT, K: int, width: int,
                 x_base: int = 0, w_base: int | None = None,
                 acc_base: int | None = None, carry_col: int | None = None,
-                zero_acc: bool = True) -> Program:
+                zero_acc: bool = True,
+                support: tuple[int, ...] | None = None) -> Program:
     """ACC <- sum_k w_k * X_k, one predicated add + sub sweep per k.
 
     ``lut_add`` computes B <- A + B + C (:func:`~repro.core.truth_tables.
@@ -102,6 +142,14 @@ def mac_program(lut_add: LUT, lut_rsub: LUT, K: int, width: int,
     truth_tables.rev_subtractor`); both keep the accumulator in column 1 so
     X stays stationary.  Carries wrap mod r^width (radix-complement), so no
     upper-digit ripple follows the sweeps.
+
+    ``support`` (sparsity compression): per-k digit-support bitmasks from
+    :func:`mac_weight_support`.  A sweep whose predicate digit is absent
+    from the column can never fire, so its compare/write steps (and the
+    carry clear in front of them) are simply not emitted — a zero trit
+    kills both sweeps for its k.  The pruned program is bit-exact on any
+    data respecting the support: the dropped sweeps would have matched no
+    row and written nothing.
     """
     lay = mac_layout(K, width)
     w_base = lay["w_base"] if w_base is None else w_base
@@ -112,34 +160,90 @@ def mac_program(lut_add: LUT, lut_rsub: LUT, K: int, width: int,
     prog: list[Op] = []
     if zero_acc:
         prog.extend(SetCol(acc_base + j, 0) for j in range(width))
-    prog.append(ForDigit("k", 0, K, (
-        ZeroCol(carry_col),
-        ForDigit("i", 0, width, (
-            ApplyLUT(lut_add, (xcol, acc_base + i, carry_col),
-                     extra_key=((w_base + k, W_PLUS),)),)),
-        ZeroCol(carry_col),
-        ForDigit("i", 0, width, (
-            ApplyLUT(lut_rsub, (xcol, acc_base + i, carry_col),
-                     extra_key=((w_base + k, W_MINUS),)),)),
-    )))
+    if support is None:
+        prog.append(ForDigit("k", 0, K, (
+            ZeroCol(carry_col),
+            ForDigit("i", 0, width, (
+                ApplyLUT(lut_add, (xcol, acc_base + i, carry_col),
+                         extra_key=((w_base + k, W_PLUS),)),)),
+            ZeroCol(carry_col),
+            ForDigit("i", 0, width, (
+                ApplyLUT(lut_rsub, (xcol, acc_base + i, carry_col),
+                         extra_key=((w_base + k, W_MINUS),)),)),
+        )))
+        return tuple(prog)
+    if len(support) != K:
+        raise ValueError(f"support has {len(support)} masks for K={K}")
+    # unrolled over k so each sweep can be kept/dropped independently;
+    # with a fully-dense support this emits the exact same schedule as
+    # the ForDigit("k", ...) loop above.
+    n_slots = 2 * K
+    live = [bool((support[kk] >> wval) & 1)
+            for kk in range(K) for wval in (W_PLUS, W_MINUS)]
+    last_live = max((s for s in range(n_slots) if live[s]), default=-1)
+    for kk in range(K):
+        xcol_k = x_base + kk * width + i
+        for lut, wval in ((lut_add, W_PLUS), (lut_rsub, W_MINUS)):
+            if not (support[kk] >> wval) & 1:
+                continue
+            prog.append(ZeroCol(carry_col))
+            prog.append(ForDigit("i", 0, width, (
+                ApplyLUT(lut, (xcol_k, acc_base + i, carry_col),
+                         extra_key=((w_base + kk, wval),)),)))
+    # set/reset parity with the dense schedule: a carry left nonzero by
+    # the final surviving sweep is cleared (one counted reset) by the next
+    # pruned slot's ZeroCol in the dense order — keep exactly that one
+    # clear when pruned slots follow the last surviving sweep.
+    if -1 < last_live < n_slots - 1:
+        prog.append(ZeroCol(carry_col))
     return tuple(prog)
 
 
-def compile_mac(radix: int, K: int, width: int, *, blocked: bool = False
-                ) -> CompiledProgram:
-    """Compile the (radix, K, width) MAC program, cached per process."""
+def _norm_support(support, K: int) -> tuple[int, ...] | None:
+    """Canonicalize a support spec: ``None`` stays ``None`` (dense loop),
+    and an all-dense tuple collapses to ``None`` so it shares the dense
+    compile-cache entry."""
+    if support is None:
+        return None
+    sup = tuple(int(m) for m in support)
+    if len(sup) != K:
+        raise ValueError(f"support has {len(sup)} masks for K={K}")
+    if all(m == SUPPORT_DENSE for m in sup):
+        return None
+    return sup
+
+
+def compile_mac(radix: int, K: int, width: int, *, blocked: bool = False,
+                support: tuple[int, ...] | None = None) -> CompiledProgram:
+    """Compile the (radix, K, width) MAC program, cached per process.
+
+    With ``support`` (see :func:`mac_weight_support`) the compiled
+    schedule carries only the sweeps that can fire for the actual weight
+    digits; the cache key includes the mask tuple, so each distinct
+    sparsity pattern compiles once."""
+    support = _norm_support(support, K)
+    label = f"mac:r{radix}:K{K}:w{width}"
+    if support is not None:
+        label += f":s{_support_digest(support)}"
     return trace.traced_compile(
         "compile_mac", _compile_mac_cached, radix, K, width, blocked=blocked,
-        _label=f"mac:r{radix}:K{K}:w{width}")
+        support=support, _label=label)
 
 
-@functools.lru_cache(maxsize=64)
+def _support_digest(support: tuple[int, ...]) -> str:
+    return hashlib.sha1(bytes(support)).hexdigest()[:10]
+
+
+@functools.lru_cache(maxsize=256)
 def _compile_mac_cached(radix: int, K: int, width: int, *,
-                        blocked: bool = False) -> CompiledProgram:
+                        blocked: bool = False,
+                        support: tuple[int, ...] | None = None
+                        ) -> CompiledProgram:
     build = build_lut_blocked if blocked else build_lut_nonblocked
     lut_add = build(tt.full_adder(radix))
     lut_rsub = build(tt.rev_subtractor(radix))
-    return compile_program(mac_program(lut_add, lut_rsub, K, width))
+    return compile_program(
+        mac_program(lut_add, lut_rsub, K, width, support=support))
 
 
 # ---------------------------------------------------------------------------
@@ -182,6 +286,45 @@ def decode_mac_acc(arr: np.ndarray, radix: int, K: int,
 # Row packing / unpacking (device-side jnp — no host round trip)
 # ---------------------------------------------------------------------------
 
+def encode_mac_x_rows_jnp(x: jax.Array, radix: int, width: int) -> jax.Array:
+    """Activation half of the MAC row encode: digits of ``x`` [R, K] in the
+    k-major/i-minor X-block layout, [R, K*width] int8.  Pure jnp, no host
+    sync; digits are the radix-complement residue mod ``r^width`` extracted
+    by iterated floor-div/mod so no ``r^width`` power is materialized."""
+    R, K = x.shape
+    v = jnp.asarray(x, jnp.int32)
+    digs = []
+    for _ in range(width):
+        # floor div/mod: negative values yield radix-complement digits
+        # (v stays -1 forever once exhausted -> all (r-1) digits)
+        digs.append((v % radix).astype(jnp.int8))
+        v = v // radix
+    return jnp.stack(digs, axis=-1).reshape(R, K * width)
+
+
+def encode_weight_digits_jnp(w_ter: jax.Array) -> jax.Array:
+    """Weight half of the MAC row encode: trit + 1 digit plane, int8, same
+    shape as ``w_ter``.  This is THE weight-side encode chokepoint — every
+    call bumps the ``mac.weight_encodes`` metrics counter, which is how the
+    resident-bank tests prove the weight-stationary path does zero
+    weight-side encode work after pinning."""
+    get_registry().counter("mac.weight_encodes").inc()
+    return jnp.asarray(w_ter, jnp.int8) + 1
+
+
+def assemble_mac_rows_jnp(xd: jax.Array, wd: jax.Array,
+                          width: int) -> jax.Array:
+    """Glue pre-encoded halves into full MAC rows: ``xd`` [R, K*width] from
+    :func:`encode_mac_x_rows_jnp`, ``wd`` [R, K] from
+    :func:`encode_weight_digits_jnp`; ACC and C columns start at 0."""
+    R, K = wd.shape
+    if xd.shape != (R, K * width):
+        raise ValueError(f"xd shape {xd.shape} != {(R, K * width)}")
+    lay = mac_layout(K, width)
+    pad = jnp.zeros((R, lay["n_cols"] - lay["acc_base"]), jnp.int8)
+    return jnp.concatenate([xd, wd, pad], axis=1)
+
+
 def encode_mac_rows_jnp(x: jax.Array, w_ter: jax.Array, radix: int,
                         width: int) -> jax.Array:
     """Device-side :func:`encode_mac_rows`: pure jnp, no host sync.
@@ -195,18 +338,9 @@ def encode_mac_rows_jnp(x: jax.Array, w_ter: jax.Array, radix: int,
     R, K = x.shape
     if w_ter.shape != (R, K):
         raise ValueError(f"w_ter shape {w_ter.shape} != x shape {(R, K)}")
-    lay = mac_layout(K, width)
-    v = jnp.asarray(x, jnp.int32)
-    digs = []
-    for _ in range(width):
-        # floor div/mod: negative values yield radix-complement digits
-        # (v stays -1 forever once exhausted -> all (r-1) digits)
-        digs.append((v % radix).astype(jnp.int8))
-        v = v // radix
-    xd = jnp.stack(digs, axis=-1).reshape(R, K * width)    # k-major, i-minor
-    wd = (jnp.asarray(w_ter, jnp.int8) + 1)
-    pad = jnp.zeros((R, lay["n_cols"] - lay["acc_base"]), jnp.int8)
-    return jnp.concatenate([xd, wd, pad], axis=1)          # ACC, C start at 0
+    return assemble_mac_rows_jnp(
+        encode_mac_x_rows_jnp(x, radix, width),
+        encode_weight_digits_jnp(w_ter), width)
 
 
 def decode_signed_digits_jnp(digits: jax.Array, radix: int) -> jax.Array:
@@ -308,6 +442,11 @@ class TiledMac(NamedTuple):
     program ``reduce_programs[j]``; after the first group, each group's
     first partial is the previous group's result (chained when the
     reduction row itself would blow the column budget).
+
+    ``support`` (when not None) records the per-k digit-support masks the
+    tile programs were pruned against, and ``dense_write_cycles`` /
+    ``dense_compare_cycles`` hold the UNPRUNED totals so the sparsity win
+    is always reportable without recompiling the dense oracle.
     """
     radix: int
     K: int
@@ -317,6 +456,9 @@ class TiledMac(NamedTuple):
     programs: tuple[CompiledProgram, ...]
     reduce_groups: tuple[int, ...]
     reduce_programs: tuple[CompiledProgram, ...]
+    support: tuple[int, ...] | None = None
+    dense_write_cycles: int | None = None
+    dense_compare_cycles: int | None = None
 
     @property
     def n_write_cycles(self) -> int:
@@ -333,6 +475,38 @@ class TiledMac(NamedTuple):
     def min_cols(self) -> int:
         """Widest row any constituent program touches."""
         return max(p.min_cols for p in self.programs + self.reduce_programs)
+
+    # -- sparsity accounting ------------------------------------------------
+
+    @property
+    def n_pruned_write_cycles(self) -> int:
+        """Write cycles the sparsity compression removed vs. dense."""
+        if self.dense_write_cycles is None:
+            return 0
+        return self.dense_write_cycles - self.n_write_cycles
+
+    @property
+    def n_pruned_compare_cycles(self) -> int:
+        if self.dense_compare_cycles is None:
+            return 0
+        return self.dense_compare_cycles - self.n_compare_cycles
+
+    @property
+    def n_dense_passes(self) -> int:
+        """Predicated sweeps the dense program replays: add + sub per k."""
+        return 2 * self.K
+
+    @property
+    def n_emitted_passes(self) -> int:
+        """Predicated sweeps the compiled (possibly pruned) program keeps."""
+        if self.support is None:
+            return self.n_dense_passes
+        return sum(((m >> W_PLUS) & 1) + ((m >> W_MINUS) & 1)
+                   for m in self.support)
+
+    @property
+    def n_pruned_passes(self) -> int:
+        return self.n_dense_passes - self.n_emitted_passes
 
 
 def _reduce_plan(n_parts: int, width: int, max_cols: int | None
@@ -361,28 +535,40 @@ def _reduce_plan(n_parts: int, width: int, max_cols: int | None
 
 
 def compile_mac_tiled(radix: int, K: int, width: int, k_tile: int, *,
-                      blocked: bool = False, max_cols: int | None = None
-                      ) -> TiledMac:
+                      blocked: bool = False, max_cols: int | None = None,
+                      support: tuple[int, ...] | None = None) -> TiledMac:
     """Compile the K-tiled MAC: ``ceil(K / k_tile)`` partial-sum programs
     plus the ripple-add reduction chain (``max_cols`` bounds the reduction
     row too).  Bit-exact vs :func:`compile_mac` at the same width — the
     partials and their sum all wrap mod ``r^width`` (radix complement), so
     tiling never changes the final residue digits.
 
-    Cached per (radix, K, width, k_tile, blocked, max_cols) — the serving
-    layers (:mod:`repro.apc.layers`) hit this once per projection shape and
-    replay the same TiledMac for every request.
+    ``support`` (per-k masks over the FULL K axis, see
+    :func:`mac_weight_support`) turns on sparsity compression: each tile
+    program is pruned against its ``support[lo:hi]`` slice, and the dense
+    cycle totals are recorded on the result for reporting.
+
+    Cached per (radix, K, width, k_tile, blocked, max_cols, support) — the
+    serving layers (:mod:`repro.apc.layers`) hit this once per projection
+    shape (per weight-content hash when pruning) and replay the same
+    TiledMac for every request.
     """
+    support = _norm_support(support, K)
+    label = f"mac_tiled:K{K}/kt{k_tile}:w{width}"
+    if support is not None:
+        label += f":s{_support_digest(support)}"
     return trace.traced_compile(
         "compile_mac_tiled", _compile_mac_tiled_cached, radix, K, width,
-        k_tile, blocked=blocked, max_cols=max_cols,
-        _label=f"mac_tiled:K{K}/kt{k_tile}:w{width}")
+        k_tile, blocked=blocked, max_cols=max_cols, support=support,
+        _label=label)
 
 
 @functools.lru_cache(maxsize=128)
 def _compile_mac_tiled_cached(radix: int, K: int, width: int, k_tile: int, *,
                               blocked: bool = False,
-                              max_cols: int | None = None) -> TiledMac:
+                              max_cols: int | None = None,
+                              support: tuple[int, ...] | None = None
+                              ) -> TiledMac:
     if k_tile < 1:
         raise ValueError(f"k_tile must be >= 1, got {k_tile}")
     if K < 1:
@@ -394,10 +580,22 @@ def _compile_mac_tiled_cached(radix: int, K: int, width: int, k_tile: int, *,
                 f"k_tile={k_tile} MAC rows need {tile_cols} columns, "
                 f"budget is {max_cols}")
     tiles = tuple((lo, min(K, lo + k_tile)) for lo in range(0, K, k_tile))
-    programs = tuple(compile_mac(radix, hi - lo, width, blocked=blocked)
-                     for lo, hi in tiles)
+    programs = tuple(
+        compile_mac(radix, hi - lo, width, blocked=blocked,
+                    support=None if support is None else support[lo:hi])
+        for lo, hi in tiles)
     groups = _reduce_plan(len(tiles), width, max_cols)
     reduce_programs = tuple(
         compile_mac_reduce(radix, width, g, blocked=blocked) for g in groups)
+    dense_w = dense_c = None
+    if support is not None:
+        # the dense tile programs are one lru hit each — record the
+        # unpruned totals so the sparsity win is visible downstream
+        dense = [compile_mac(radix, hi - lo, width, blocked=blocked)
+                 for lo, hi in tiles]
+        dense_w = (sum(p.n_write_cycles for p in dense)
+                   + sum(p.n_write_cycles for p in reduce_programs))
+        dense_c = (sum(p.n_compare_cycles for p in dense)
+                   + sum(p.n_compare_cycles for p in reduce_programs))
     return TiledMac(radix, K, width, k_tile, tiles, programs, groups,
-                    reduce_programs)
+                    reduce_programs, support, dense_w, dense_c)

@@ -38,6 +38,7 @@ blocks, with every program's counters folded into one APStats.
 from __future__ import annotations
 
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -47,11 +48,23 @@ from ..core.energy import T_EVALUATE_NS, T_PRECHARGE_NS, T_WRITE_NS
 from ..kernels.tap_pass.kernel import tap_run_program
 from ..kernels.tap_pass.ops import _pad_rows
 from . import trace
+from .caches import ResidentHandle, ResidentStore
 from .lower import CompiledProgram, resolve_schedule
 from .metrics import get_registry
-from .mac import (TiledMac, decode_signed_digits_jnp, encode_mac_rows_jnp,
-                  mac_layout)
+from .mac import (TiledMac, assemble_mac_rows_jnp, decode_signed_digits_jnp,
+                  encode_mac_rows_jnp, encode_mac_x_rows_jnp,
+                  encode_weight_digits_jnp, mac_layout, weight_digest)
 from .stats import HIST_BINS, TracedStats, accumulate
+
+
+def resident_enabled() -> bool:
+    """The ``REPRO_AP_RESIDENT`` env knob: when truthy,
+    :func:`run_mac_tiled` auto-pins weight digit planes into the pool's
+    resident store (content-keyed) even when the caller passes no handle —
+    the CI pool shard re-runs under this to prove the weight-stationary
+    path stays bit-exact."""
+    return os.environ.get("REPRO_AP_RESIDENT", "0").lower() in (
+        "1", "true", "yes", "on")
 
 
 class ArrayPool:
@@ -59,7 +72,8 @@ class ArrayPool:
 
     def __init__(self, n_arrays: int = 4, rows: int = 4096,
                  cols: int = 256, *, kernel_variant: str | None = None,
-                 interpret: bool | None = None, unroll: int | None = None):
+                 interpret: bool | None = None, unroll: int | None = None,
+                 resident_slots: int = 256):
         if n_arrays < 1:
             raise ValueError(f"n_arrays must be >= 1, got {n_arrays}")
         if rows < 1 or cols < 1:
@@ -67,6 +81,10 @@ class ArrayPool:
         self.n_arrays = n_arrays
         self.rows = rows
         self.cols = cols
+        # weight-stationary resident-operand store: digit planes written
+        # into the bank once and reused across calls (bounded, visible in
+        # caches.cache_stats)
+        self.resident = ResidentStore(maxsize=resident_slots)
         # pool-level execution knobs: per-call kwargs override, None means
         # the measured backend default (kernels.tap_pass.kernel)
         self.kernel_variant = kernel_variant
@@ -311,7 +329,8 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
                   block_rows: int | None = None,
                   interpret: bool | None = None,
                   kernel_variant: str | None = None,
-                  unroll: int | None = None) -> jax.Array:
+                  unroll: int | None = None,
+                  resident: ResidentHandle | None = None) -> jax.Array:
     """ACC = sum_k w_k * x_k through the K-tiled programs, over a pool.
 
     ``x`` [R, K] integer dtype, ``w_ter`` [R, K] in {-1, 0, +1} (device
@@ -322,6 +341,16 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
 
     ``pool=None`` runs every program on the single-array executor (same
     digits, same counters) — the tiled-vs-untiled equivalence oracle.
+
+    ``resident`` (weight-stationary dataflow): a
+    :class:`~repro.apc.caches.ResidentHandle` whose digit plane is
+    ``[R_w, K]`` with ``R_w`` dividing R; the weight-side encode is
+    SKIPPED entirely and each tile's weight columns are sliced from the
+    resident plane (row-tiled up to R, matching
+    :func:`~repro.apc.mac.matmul_mac_rows` ordering).  A stale or evicted
+    handle raises.  With :func:`resident_enabled` and a pool, an
+    auto-handle is pinned content-keyed into ``pool.resident`` when the
+    caller passes none — hits skip the weight encode just the same.
     """
     from .exec import execute                       # lazy: import cycle
     from .graph import CARRIED, fold_stage_input, mac_fold_plan
@@ -336,6 +365,21 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
         for prog in tiled.programs + tiled.reduce_programs:
             pool.validate(prog)                     # fail before any launch
     radix, width = tiled.radix, tiled.width
+    if resident is None and pool is not None and resident_enabled():
+        digest = weight_digest(w_ter)
+        w_dev = jnp.asarray(w_ter)
+        resident = pool.resident.pin(
+            f"auto:{digest}", digest,
+            lambda: encode_weight_digits_jnp(w_dev))
+    plane = None
+    if resident is not None:
+        plane = resident.resolve()                  # raises if stale/evicted
+        rw, kw = plane.shape
+        if kw != K or R % rw:
+            raise ValueError(
+                f"resident plane is {rw}x{kw}, rows R={R} K={K} need a "
+                f"[R_w, K] plane with R_w dividing R")
+        reps = R // rw
 
     def _run(arr, compiled, label):
         if pool is not None:
@@ -361,8 +405,18 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
         for t, ((lo, hi), prog) in enumerate(zip(tiled.tiles,
                                                  tiled.programs)):
             kt = hi - lo
-            arr_t = encode_mac_rows_jnp(x[:, lo:hi], w_ter[:, lo:hi], radix,
-                                        width)
+            if plane is None:
+                arr_t = encode_mac_rows_jnp(x[:, lo:hi], w_ter[:, lo:hi],
+                                            radix, width)
+            else:
+                # weight-stationary: x-side encode only, weight digits
+                # sliced from the resident plane (zero weight encode work)
+                wd = plane[:, lo:hi]
+                if reps > 1:
+                    wd = jnp.tile(wd, (reps, 1))
+                arr_t = assemble_mac_rows_jnp(
+                    encode_mac_x_rows_jnp(x[:, lo:hi], radix, width),
+                    wd, width)
             out = _run(arr_t, prog, f"tile{t}[{lo}:{hi}]")
             base = mac_layout(kt, width)["acc_base"]
             partials.append(out[:, base:base + width])

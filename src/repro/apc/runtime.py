@@ -52,10 +52,11 @@ class DevicePool(ArrayPool):
 
     def __init__(self, mesh=None, *, n_arrays: int = 4, rows: int = 4096,
                  cols: int = 256, kernel_variant: str | None = None,
-                 interpret: bool | None = None, unroll: int | None = None):
+                 interpret: bool | None = None, unroll: int | None = None,
+                 resident_slots: int = 256):
         super().__init__(n_arrays=n_arrays, rows=rows, cols=cols,
                          kernel_variant=kernel_variant, interpret=interpret,
-                         unroll=unroll)
+                         unroll=unroll, resident_slots=resident_slots)
         self.mesh = mesh
         if mesh is None:
             self.axes: tuple[str, ...] = ()

@@ -105,8 +105,9 @@ class WaveMerger:
         self._reports: list[dict | None] = [None] * n_slots
         self._accums: list[list[tuple]] = [[] for _ in range(n_slots)]
         self._run_error: BaseException | None = None
-        # per-slot, per-graph-call node profiles (compiled, rows, deps) —
-        # the admission oracle's raw material
+        # per-slot, per-graph-call node profiles
+        # (compiled, rows, deps, upload_cycles) — the admission oracle's
+        # raw material (upload priced so resident-weight waves cost less)
         self.profiles: list[list[list[tuple]]] = [[] for _ in range(n_slots)]
         self.n_merged_runs = 0
         self.merged_nodes = 0
@@ -124,7 +125,8 @@ class WaveMerger:
         slot = self._tls.slot
         self._graphs[slot] = graph
         self.profiles[slot].append(
-            [(n.compiled, n.rows, n.deps) for n in graph.nodes])
+            [(n.compiled, n.rows, n.deps, n.upload_cycles)
+             for n in graph.nodes])
         try:
             if self._barrier.wait() == 0:        # all deposited; 0 leads
                 try:
@@ -201,15 +203,17 @@ class AdmissionCfg:
 def wave_cost_cycles(profiles, *, n_arrays: int, rows_per_array: int,
                      n_devices: int = 1) -> int:
     """Occupancy-model makespan (cycles) of one wave built from per-request
-    step profiles (lists of per-graph-call ``(compiled, rows, deps)``
-    node lists)."""
+    step profiles (lists of per-graph-call ``(compiled, rows, deps)`` or
+    ``(compiled, rows, deps, upload_cycles)`` node lists — the 4th entry
+    prices operand uploads, so resident-weight waves cost less)."""
     shadow = ProgramGraph()
     for prof in profiles:
         for gnodes in prof:
             base = len(shadow.nodes)
-            for compiled, rows, deps in gnodes:
+            for compiled, rows, deps, *rest in gnodes:
                 shadow.add(compiled, rows=rows, build=_never_build,
-                           deps=tuple(base + d for d in deps))
+                           deps=tuple(base + d for d in deps),
+                           upload_cycles=rest[0] if rest else 0)
     if not len(shadow):
         return 0
     rep = graph_makespan(shadow, n_arrays=n_arrays,

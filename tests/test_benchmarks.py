@@ -160,6 +160,57 @@ def test_apc_bench_json_recorded_ap_runtime_rows():
             assert r["makespan_cycles"] < r["sequential_cycles"]
 
 
+def test_bench_ap_sparse_smoke_schema():
+    """CI smoke: the ap_sparse trajectory rows keep their schema at toy
+    sizes; streaming/resident bit-equality is asserted inside the bench,
+    and pruned cycles track the zero fraction."""
+    from benchmarks.kernels_bench import bench_ap_sparse
+    rows = bench_ap_sparse(m=2, k=8, n=2, k_tile=4, pool_rows=4,
+                           zero_fracs=(0.0, 0.5), n_timing=1)
+    assert len(rows) == 2
+    keys = {"bench", "m", "k", "n", "radix", "acc_width", "k_tile",
+            "cols_budget", "n_arrays", "zero_frac", "n_zero_k",
+            "emitted_passes", "pruned_passes", "write_cycles",
+            "compare_cycles", "dense_write_cycles", "dense_compare_cycles",
+            "write_cycle_reduction", "us_streaming", "us_resident",
+            "encode_us_streaming", "encode_us_resident", "resident_hits"}
+    for r in rows:
+        assert keys <= set(r)
+        assert r["bench"] == "ap_sparse"
+        assert r["write_cycles"] <= r["dense_write_cycles"]
+        assert r["write_cycle_reduction"] >= 0.9 * r["zero_frac"]
+    dense, half = rows
+    assert dense["zero_frac"] == 0.0 and dense["pruned_passes"] == 0
+    assert dense["write_cycles"] == dense["dense_write_cycles"]
+    assert half["pruned_passes"] == 2 * half["n_zero_k"] > 0
+    assert half["write_cycles"] < dense["write_cycles"]
+
+
+def test_apc_bench_json_recorded_ap_sparse_rows():
+    """The RECORDED benchmarks/apc_bench.json must carry the ap_sparse
+    trajectory: cycle reduction tracking the zero fraction (>= 0.9 * s on
+    every row) across both dataflows."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks", "apc_bench.json")
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("ap_sparse", [])
+    assert rows, "apc_bench.json is missing the ap_sparse trajectory"
+    assert len(rows) >= 3              # a curve, not a point
+    fracs = [r["zero_frac"] for r in rows]
+    assert fracs == sorted(fracs) and fracs[0] == 0.0 and fracs[-1] >= 0.9
+    for r in rows:
+        assert r["bench"] == "ap_sparse"
+        assert r["write_cycles"] <= r["dense_write_cycles"]
+        assert r["compare_cycles"] <= r["dense_compare_cycles"]
+        assert r["write_cycle_reduction"] >= 0.9 * r["zero_frac"]
+        assert r["us_streaming"] > 0 and r["us_resident"] > 0
+        assert r["encode_us_streaming"] > 0 and r["encode_us_resident"] > 0
+        assert r["pruned_passes"] == 2 * r["n_zero_k"]
+
+
 @pytest.mark.slow
 def test_serve_bench_load_point_schema():
     """One serve_bench load point end-to-end: the ap_serve row carries the

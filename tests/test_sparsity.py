@@ -1,0 +1,554 @@
+"""Sparsity-compressed MAC programs + weight-stationary resident bank.
+
+Acceptance contract (ISSUE 8):
+
+- pruning against the weights' per-k digit support drops exactly the
+  compare/write steps whose predicate can never fire: the pruned schedule
+  equals the dense schedule filtered by support (step-level oracle), and on
+  any support-respecting data the digits AND APStats sets/resets are
+  bit-exact vs the unpruned program (radix 3/4/5, hypothesis);
+- a zero-fraction ``s`` of whole weight columns drops tiled cycle counts by
+  >= 0.9 * s; the all-zero tile degenerates to the accumulator clear, the
+  fully-dense support compiles to the identical dense program object;
+- the resident-operand store is bounded get-or-put with generation
+  bookkeeping: stale handles (weight swap under the same key) and evicted
+  handles raise instead of serving dead columns, occupancy is visible in
+  cache_stats();
+- APLinear pins weights resident: 2nd+ calls do ZERO weight-side encode
+  work (the ``mac.weight_encodes`` chokepoint counter does not move) and
+  bit-identical outputs; per-request reports carry sparsity + residency
+  attribution; >= 4 concurrent batched requests stay bit-identical to
+  sequential with residency on.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import apc
+from repro.apc.lower import Step
+from repro.apc.mac import W_MINUS, W_PLUS, W_ZERO
+from repro.apc.pool import run_mac_tiled
+from repro.core.ap import APStats
+
+try:                       # hypothesis drives the property when available;
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # a fixed seed sweep keeps the coverage without it
+    HAVE_HYPOTHESIS = False
+
+
+def _stats_pair(arr, compiled, radix):
+    out, tr = apc.execute(jnp.asarray(arr), compiled, collect_stats=True)
+    return np.asarray(out), apc.to_ap_stats(tr, compiled, arr.shape[0],
+                                            radix)
+
+
+def _rand_ternary(rng, shape, zero_bias=0.5):
+    w = rng.integers(-1, 2, size=shape)
+    w[rng.random(shape) < zero_bias] = 0
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Support masks + compile-cache identity
+# ---------------------------------------------------------------------------
+
+def test_mac_weight_support_masks():
+    w = np.array([[1, 0, -1, 0],
+                  [1, 0, -1, 1]])               # rows share the program
+    sup = apc.mac_weight_support(w)
+    assert sup == (1 << W_PLUS,                 # only +1 seen
+                   1 << W_ZERO,                 # all-zero column
+                   1 << W_MINUS,                # only -1 seen
+                   (1 << W_ZERO) | (1 << W_PLUS))
+    assert apc.mac_weight_support(np.zeros((3, 2), np.int8)) == \
+        (1 << W_ZERO,) * 2
+    with pytest.raises(ValueError, match="ternary"):
+        apc.mac_weight_support(np.array([[2, 0]]))
+    with pytest.raises(ValueError, match="K axis"):
+        apc.mac_weight_support(np.int8(1))
+
+
+def test_dense_support_compiles_to_identical_program():
+    dense = apc.compile_mac(3, 4, 6)
+    sup = (apc.SUPPORT_DENSE,) * 4
+    assert apc.compile_mac(3, 4, 6, support=sup) is dense
+    tiled = apc.compile_mac_tiled(3, 4, 6, 2)
+    assert apc.compile_mac_tiled(3, 4, 6, 2, support=sup) is tiled
+    assert tiled.support is None
+    assert tiled.n_pruned_passes == 0
+    assert tiled.n_pruned_write_cycles == 0
+
+
+def test_support_length_validates():
+    with pytest.raises(ValueError, match="masks for K"):
+        apc.compile_mac(3, 4, 6, support=(apc.SUPPORT_DENSE,) * 3)
+
+
+def test_weight_digest_keys_content_and_shape():
+    a = np.array([[1, 0], [-1, 1]])
+    assert apc.weight_digest(a) == apc.weight_digest(a.copy())
+    assert apc.weight_digest(a) != apc.weight_digest(a.T)
+    assert apc.weight_digest(a) != apc.weight_digest(np.zeros_like(a))
+
+
+# ---------------------------------------------------------------------------
+# Step-level oracle: pruned schedule == dense schedule filtered by support
+# ---------------------------------------------------------------------------
+
+def _filter_dense_steps(dense_steps, support, K, width):
+    """Independent reference pruner over the LOWERED dense schedule: a
+    predicated step belongs to sweep (k, v) via its weight-column compare
+    key; the carry clear in front of a sweep survives only if the sweep
+    does, plus one trailing clear when pruned slots follow the last
+    surviving sweep (set/reset parity for the final carry state)."""
+    lay = apc.mac_layout(K, width)
+    w_lo, w_hi = lay["w_base"], lay["w_base"] + K
+    carry = lay["carry_col"]
+    out, pending = [], None
+    kept_any, dropped_after_keep = False, False
+    for s in dense_steps:
+        if not s.keys:
+            if s.write_cols == (carry,):
+                pending = s
+            else:
+                out.append(s)                   # zero_acc SetCol
+            continue
+        wcol = s.compare_cols[-1]               # extra_key appends last
+        assert w_lo <= wcol < w_hi
+        v = s.keys[0][-1]
+        if (support[wcol - w_lo] >> v) & 1:
+            if pending is not None:
+                out.append(pending)
+                pending = None
+            out.append(s)
+            kept_any, dropped_after_keep = True, False
+        else:
+            pending = None
+            dropped_after_keep = True
+    if kept_any and dropped_after_keep:
+        out.append(Step(keys=(), compare_cols=(), write_cols=(carry,),
+                        write_vals=(0,), in_hist=False))
+    return tuple(out)
+
+
+@pytest.mark.parametrize("radix,K,width,seed", [
+    (3, 5, 4, 0), (4, 3, 3, 1), (5, 4, 2, 2), (3, 7, 3, 3)])
+def test_pruned_schedule_matches_filtered_dense_oracle(radix, K, width,
+                                                       seed):
+    rng = np.random.default_rng(seed)
+    w = _rand_ternary(rng, (2, K))
+    sup = apc.mac_weight_support(w)
+    dense = apc.compile_mac(radix, K, width)
+    sparse = apc.compile_mac(radix, K, width, support=sup)
+    assert sparse.steps == _filter_dense_steps(dense.steps, sup, K, width)
+    assert sparse.n_write_cycles < dense.n_write_cycles
+    assert sparse.n_compare_cycles < dense.n_compare_cycles
+
+
+def test_all_zero_weights_degenerate_to_acc_clear():
+    K, width = 4, 3
+    sup = (1 << W_ZERO,) * K
+    prog = apc.compile_mac(3, K, width, support=sup)
+    # nothing to sweep: the program is exactly the width SetCol acc clears
+    assert prog.n_write_cycles == width
+    assert prog.n_compare_cycles == 0
+    rng = np.random.default_rng(0)
+    arr = apc.encode_mac_rows(rng.integers(-4, 5, (3, K)),
+                              np.zeros((3, K), np.int64), 3, width)
+    out, stc = _stats_pair(arr, prog, 3)
+    assert (apc.decode_mac_acc(out, 3, K, width) == 0).all()
+    assert stc.sets == 0 and stc.resets == 0
+
+
+# ---------------------------------------------------------------------------
+# Bit-parity on support-respecting data (hypothesis, radix 3/4/5)
+# ---------------------------------------------------------------------------
+
+def _check_sparse_mac_bit_parity(radix, K, R, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand_ternary(rng, (R, K), zero_bias=0.6)
+    max_q = 5
+    x = rng.integers(-max_q, max_q + 1, size=(R, K))
+    width = apc.mac_acc_width(radix, K, max_q)
+    sup = apc.mac_weight_support(w)
+    dense = apc.compile_mac(radix, K, width)
+    sparse = apc.compile_mac(radix, K, width, support=sup)
+    arr = apc.encode_mac_rows(x, w, radix, width)
+    out_d, st_d = _stats_pair(arr, dense, radix)
+    out_s, st_s = _stats_pair(arr, sparse, radix)
+    # FULL array parity: pruned sweeps fire on no row, so even the scratch
+    # X/carry columns end identical — not just the accumulator digits
+    assert (out_d == out_s).all()
+    assert (apc.decode_mac_acc(out_s, radix, K, width)
+            == (w * x).sum(axis=1)).all()
+    assert (st_d.sets, st_d.resets) == (st_s.sets, st_s.resets)
+    # schedule-static charges and the mismatch histogram may only shrink
+    assert st_s.n_write_cycles <= st_d.n_write_cycles
+    assert st_s.n_compare_cycles <= st_d.n_compare_cycles
+    assert st_s.mismatch_hist.sum() <= st_d.mismatch_hist.sum()
+
+
+@pytest.mark.parametrize("radix", [3, 4, 5])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sparse_mac_bit_parity_random_sparse_weights(radix, seed):
+    rng = np.random.default_rng(100 * radix + seed)
+    _check_sparse_mac_bit_parity(radix, int(rng.integers(2, 7)),
+                                 int(rng.integers(1, 6)), seed)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_sparse_mac_bit_parity_hypothesis():
+    @given(st.integers(3, 5), st.integers(2, 6), st.integers(1, 5),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=12, deadline=None)
+    def prop(radix, K, R, seed):
+        _check_sparse_mac_bit_parity(radix, K, R, seed)
+
+    prop()
+
+
+def test_sparse_tiled_runtime_parity_and_stats():
+    rng = np.random.default_rng(7)
+    radix, K, N, T = 3, 8, 3, 2
+    w = _rand_ternary(rng, (K, N))
+    x = rng.integers(-7, 8, size=(T, K))
+    width = apc.mac_acc_width(radix, K, 7)
+    sup = apc.mac_weight_support(w.T)
+    td = apc.compile_mac_tiled(radix, K, width, 3)
+    ts = apc.compile_mac_tiled(radix, K, width, 3, support=sup)
+    pool = apc.ArrayPool(n_arrays=2, rows=32, cols=512)
+    xr, wr = apc.matmul_mac_rows(jnp.asarray(x), jnp.asarray(w))
+    sd, ss = APStats(radix), APStats(radix)
+    od = run_mac_tiled(xr, wr, td, pool=pool, stats=sd)
+    os_ = run_mac_tiled(xr, wr, ts, pool=pool, stats=ss)
+    assert (np.asarray(od) == np.asarray(os_)).all()
+    assert (np.asarray(os_).reshape(T, N) == x @ w).all()
+    assert (sd.sets, sd.resets) == (ss.sets, ss.resets)
+    assert ss.n_write_cycles == ts.n_write_cycles < td.n_write_cycles
+
+
+# ---------------------------------------------------------------------------
+# Cycle drop >= 0.9 * zero fraction (whole-column zeros)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_zero_k", [3, 5, 9])
+def test_cycle_drop_tracks_zero_fraction(n_zero_k):
+    rng = np.random.default_rng(n_zero_k)
+    radix, K, N = 3, 10, 4
+    width = apc.mac_acc_width(radix, K, 7)
+    w = rng.integers(-1, 2, size=(K, N))
+    w[:, 0], w[:, 1] = 1, -1        # both sweeps live on every column...
+    zk = rng.choice(K, size=n_zero_k, replace=False)
+    w[zk, :] = 0                                # ...minus whole-k zeros
+    s = n_zero_k / K
+    sup = apc.mac_weight_support(w.T)
+    dense = apc.compile_mac_tiled(radix, K, width, 5)
+    sparse = apc.compile_mac_tiled(radix, K, width, 5, support=sup)
+    assert sparse.n_pruned_passes == 2 * n_zero_k
+    for attr in ("n_write_cycles", "n_compare_cycles"):
+        d, p = getattr(dense, attr), getattr(sparse, attr)
+        assert (d - p) / d >= 0.9 * s, (attr, d, p, s)
+    rep = apc.mac_sparsity(sparse)
+    assert rep["dense_passes"] == 2 * K
+    assert rep["pruned_passes"] == 2 * n_zero_k
+    assert rep["pass_prune_frac"] == pytest.approx(s)
+    assert rep["write_cycle_reduction"] >= 0.9 * s
+    assert rep["dense_write_cycles"] == dense.n_write_cycles
+
+
+def test_mac_sparsity_on_dense_tiled_is_all_zero_prune():
+    tiled = apc.compile_mac_tiled(3, 4, 6, 2)
+    rep = apc.mac_sparsity(tiled)
+    assert rep["pruned_passes"] == 0
+    assert rep["pass_prune_frac"] == 0.0
+    assert rep["write_cycle_reduction"] == 0.0
+    assert rep["write_cycles"] == tiled.n_write_cycles
+
+
+# ---------------------------------------------------------------------------
+# ResidentStore: bounded get-or-put + generation/eviction bookkeeping
+# ---------------------------------------------------------------------------
+
+def _plane(val, shape=(2, 3)):
+    return jnp.full(shape, val, jnp.int8)
+
+
+def test_resident_store_get_or_put_and_stats():
+    store = apc.ResidentStore(maxsize=4, name="t0")
+    calls = []
+    h1 = store.pin("a", "d1", lambda: calls.append(1) or _plane(1))
+    h2 = store.pin("a", "d1", lambda: calls.append(2) or _plane(9))
+    assert h2 is h1                             # hit: no rebuild
+    assert calls == [1]
+    assert (np.asarray(h1.resolve()) == 1).all()
+    st_ = store.stats()
+    assert st_ == {"hits": 1, "misses": 1, "maxsize": 4, "currsize": 1,
+                   "evictions": 0, "stale": 0}
+
+
+def test_resident_store_generation_bump_and_stale():
+    store = apc.ResidentStore(maxsize=4)
+    h1 = store.pin("k", "d1", lambda: _plane(1))
+    h2 = store.pin("k", "d2", lambda: _plane(2))   # weight swap, same key
+    assert h2.generation == h1.generation + 1
+    with pytest.raises(apc.ResidentStale):
+        h1.resolve()
+    assert (np.asarray(h2.resolve()) == 2).all()
+    assert store.stats()["stale"] == 1
+
+
+def test_resident_store_fifo_eviction_raises():
+    store = apc.ResidentStore(maxsize=2)
+    h1 = store.pin("a", "d", lambda: _plane(1))
+    store.pin("b", "d", lambda: _plane(2))
+    store.pin("c", "d", lambda: _plane(3))      # evicts "a" (FIFO)
+    assert store.stats()["currsize"] == 2
+    assert store.stats()["evictions"] == 1
+    with pytest.raises(apc.ResidentEvicted):
+        h1.resolve()
+    assert store.get("a") is None
+    assert store.get("c") is not None
+
+
+def test_resident_store_visible_in_cache_stats():
+    store = apc.ResidentStore(maxsize=8, name="visible-store")
+    store.pin("x", "d", lambda: _plane(1))
+    stats = apc.cache_stats()
+    assert "visible-store" in stats
+    entry = stats["visible-store"]
+    for k in ("hits", "misses", "maxsize", "currsize"):
+        assert k in entry
+    assert entry["currsize"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Weight-stationary run_mac_tiled: explicit handle + env auto-pin
+# ---------------------------------------------------------------------------
+
+def _mac_case(rng, radix=3, K=6, N=3, T=2, max_q=7):
+    w = _rand_ternary(rng, (K, N))
+    x = rng.integers(-max_q, max_q + 1, size=(T, K))
+    width = apc.mac_acc_width(radix, K, max_q)
+    tiled = apc.compile_mac_tiled(radix, K, width, 3,
+                                  support=apc.mac_weight_support(w.T))
+    return w, x, tiled
+
+
+def test_run_mac_tiled_resident_matches_streaming():
+    rng = np.random.default_rng(11)
+    w, x, tiled = _mac_case(rng)
+    pool = apc.ArrayPool(n_arrays=2, rows=32, cols=512)
+    xr, wr = apc.matmul_mac_rows(jnp.asarray(x), jnp.asarray(w))
+    out_stream = run_mac_tiled(xr, wr, tiled, pool=pool)
+    h = pool.resident.pin(
+        "w", apc.weight_digest(w.T),
+        lambda: apc.encode_weight_digits_jnp(jnp.asarray(w).T))
+    # the [N, K] plane row-tiles up to the T*N launch rows
+    out_res = run_mac_tiled(xr, None, tiled, pool=pool, resident=h)
+    assert (np.asarray(out_stream) == np.asarray(out_res)).all()
+    assert (np.asarray(out_res).reshape(x.shape[0], -1) == x @ w).all()
+
+
+def test_run_mac_tiled_env_auto_pin(monkeypatch):
+    monkeypatch.setenv("REPRO_AP_RESIDENT", "1")
+    assert apc.resident_enabled()
+    rng = np.random.default_rng(13)
+    w, x, tiled = _mac_case(rng)
+    pool = apc.ArrayPool(n_arrays=2, rows=32, cols=512)
+    xr, wr = apc.matmul_mac_rows(jnp.asarray(x), jnp.asarray(w))
+    out1 = run_mac_tiled(xr, wr, tiled, pool=pool)
+    assert pool.resident.stats()["misses"] == 1
+    out2 = run_mac_tiled(xr, wr, tiled, pool=pool)
+    assert pool.resident.stats()["hits"] == 1   # content-keyed reuse
+    assert (np.asarray(out1) == np.asarray(out2)).all()
+    monkeypatch.setenv("REPRO_AP_RESIDENT", "0")
+    assert not apc.resident_enabled()
+
+
+def test_graph_run_with_stale_resident_raises():
+    rng = np.random.default_rng(17)
+    w, x, tiled = _mac_case(rng)
+    pool = apc.ArrayPool(n_arrays=2, rows=32, cols=512)
+    rt = apc.Runtime(pool)
+    h = pool.resident.pin(
+        "shared", apc.weight_digest(w.T),
+        lambda: apc.encode_weight_digits_jnp(jnp.asarray(w).T))
+    g = apc.ProgramGraph()
+    xr = jnp.repeat(jnp.asarray(x), w.shape[1], axis=0)
+    g.add_mac_tiled(xr, None, tiled, resident=h)
+    # weight swap under the same key before the graph executes: the build
+    # must raise, never silently reuse the dead columns
+    pool.resident.pin("shared", "other-digest", lambda: _plane(0, (3, 6)))
+    with pytest.raises(apc.ResidentStale):
+        rt.run_graph(g)
+
+
+# ---------------------------------------------------------------------------
+# Occupancy model: upload charges + residency in coalesce identity
+# ---------------------------------------------------------------------------
+
+def test_upload_cycles_charged_streaming_vs_resident():
+    rng = np.random.default_rng(19)
+    w, x, tiled = _mac_case(rng)
+    pool = apc.ArrayPool(n_arrays=2, rows=32, cols=512)
+    xr, wr_rows = apc.matmul_mac_rows(jnp.asarray(x), jnp.asarray(w))
+    h = pool.resident.pin(
+        "u", apc.weight_digest(w.T),
+        lambda: apc.encode_weight_digits_jnp(jnp.asarray(w).T))
+
+    g_stream, g_res, g_free = (apc.ProgramGraph() for _ in range(3))
+    g_stream.add_mac_tiled(xr, wr_rows, tiled, charge_upload=True)
+    g_res.add_mac_tiled(xr, None, tiled, resident=h, charge_upload=True)
+    g_free.add_mac_tiled(xr, wr_rows, tiled)    # historical default
+    up = [sum(n.upload_cycles for n in g.nodes)
+          for g in (g_stream, g_res, g_free)]
+    # streaming pays x AND weight columns, resident only x, default none
+    assert up[0] > up[1] > up[2] == 0
+    assert up[0] - up[1] == sum(hi - lo for lo, hi in tiled.tiles)
+    for g in (g_stream, g_res):
+        rep = apc.graph_makespan(g, n_arrays=2, rows_per_array=32)
+        assert rep["makespan_cycles"] <= rep["sequential_cycles"]
+    rep_s = apc.graph_makespan(g_stream, n_arrays=2, rows_per_array=32)
+    rep_r = apc.graph_makespan(g_res, n_arrays=2, rows_per_array=32)
+    assert rep_s["sequential_cycles"] > rep_r["sequential_cycles"]
+
+
+def test_coalesce_merges_only_same_resident_generation():
+    from repro.apc.graph import coalesce_graphs
+    rng = np.random.default_rng(23)
+    radix, K, N, T = 3, 4, 2, 2
+    w = _rand_ternary(rng, (K, N))
+    width = apc.mac_acc_width(radix, K, 7)
+    tiled = apc.compile_mac_tiled(radix, K, width, K,
+                                  support=apc.mac_weight_support(w.T))
+    pool = apc.ArrayPool(n_arrays=2, rows=32, cols=512)
+    digest = apc.weight_digest(w.T)
+    plane = lambda: apc.encode_weight_digits_jnp(jnp.asarray(w).T)  # noqa: E731
+    h = pool.resident.pin("c", digest, plane)
+    xr = jnp.repeat(jnp.asarray(rng.integers(-7, 8, (T, K))), N, axis=0)
+
+    def one_graph(handle):
+        g = apc.ProgramGraph()
+        g.add_mac_tiled(xr, None, tiled, resident=handle,
+                        charge_upload=True)
+        return g
+
+    merged, _ = coalesce_graphs([one_graph(h), one_graph(h)], block_rows=8)
+    assert len(merged.nodes) == 1               # same generation: one wave
+
+    h2 = pool.resident.pin("c", "swapped", plane)   # generation bump
+    merged2, _ = coalesce_graphs([one_graph(h), one_graph(h2)],
+                                 block_rows=8)
+    assert len(merged2.nodes) == 2              # disagree: no sharing
+
+
+# ---------------------------------------------------------------------------
+# APLinear: pin-at-construction, zero re-encode, stale on weight swap
+# ---------------------------------------------------------------------------
+
+def _ctx(n_arrays=2, rows=64, cols=160):
+    pool = apc.ArrayPool(n_arrays=n_arrays, rows=rows, cols=cols)
+    return apc.APServeContext(apc.Runtime(pool), x_levels=7)
+
+
+def test_aplinear_zero_weight_encode_after_pin():
+    rng = np.random.default_rng(29)
+    ctx = _ctx()
+    lin = apc.APLinear.from_dense(
+        jnp.asarray(rng.standard_normal((12, 4)), jnp.float32), label="p")
+    x = jnp.asarray(rng.standard_normal((3, 12)), jnp.float32)
+    enc = apc.get_registry().counter("mac.weight_encodes")
+    before = enc.value
+    y1 = lin(x, ctx)                            # auto-pins: ONE encode
+    assert enc.value == before + 1
+    y2 = lin(x, ctx)
+    y3 = lin(x, ctx)
+    assert enc.value == before + 1              # 2nd+ calls: zero encodes
+    assert (np.asarray(y1) == np.asarray(y2)).all()
+    assert (np.asarray(y1) == np.asarray(y3)).all()
+    rep = ctx.report()
+    assert rep["resident_misses"] == 0          # construction pin not billed
+    assert rep["resident_hits"] == 3
+    assert rep["resident_hit_rate"] == 1.0
+    assert 0.0 <= rep["weight_sparsity"] <= 1.0
+    assert rep["emitted_passes"] > 0
+    assert ctx.cache_stats()["resident"]["currsize"] == 1
+
+
+def test_aplinear_reports_pruning_and_matches_dense():
+    rng = np.random.default_rng(31)
+    ctx = _ctx()
+    w = _rand_ternary(rng, (16, 3), zero_bias=0.7).astype(np.int8)
+    scale = np.ones(3, np.float32)
+    lin_s = apc.APLinear(jnp.asarray(w), jnp.asarray(scale), label="s")
+    lin_d = apc.APLinear(jnp.asarray(w), jnp.asarray(scale), label="d",
+                         sparse=False)
+    x = jnp.asarray(rng.standard_normal((2, 16)), jnp.float32)
+    ys = lin_s(x, ctx)
+    yd = lin_d(x, ctx)
+    assert (np.asarray(ys) == np.asarray(yd)).all()
+    rep = ctx.report()
+    assert rep["pruned_passes"] > 0             # only the sparse linear's
+    assert rep["pruned_write_cycles"] > 0
+    assert rep["weight_sparsity"] == pytest.approx((w == 0).mean())
+
+
+def test_aplinear_stale_after_weight_swap_same_label():
+    rng = np.random.default_rng(37)
+    store = apc.ResidentStore(maxsize=8)
+    w1 = _rand_ternary(rng, (6, 2)).astype(np.int8)
+    w2 = np.where(w1 == 0, np.int8(1), np.int8(0))
+    lin1 = apc.APLinear(jnp.asarray(w1), jnp.ones(2, jnp.float32),
+                        label="swap", store=store)
+    h1 = lin1._handle
+    apc.APLinear(jnp.asarray(w2), jnp.ones(2, jnp.float32),
+                 label="swap", store=store)     # same key, new content
+    with pytest.raises(apc.ResidentStale):
+        h1.resolve()
+    # lin1 itself recovers: add_call re-pins get-or-put (generation bump)
+    ctx = _ctx()
+    g = apc.ProgramGraph()
+    x_int = jnp.asarray(rng.integers(-7, 8, (2, 6)), jnp.int32)
+    lin1.add_call(g, x_int, max_cols=ctx.max_cols, max_q=7)
+    assert lin1._handle.generation > h1.generation
+    res = ctx.runtime.run_graph(g)
+    acc = apc.decode_signed_digits_jnp(res[len(g.nodes) - 1], 3)
+    assert (np.asarray(acc).reshape(2, 2) == np.asarray(x_int) @ w1).all()
+
+
+# ---------------------------------------------------------------------------
+# Batched serving: residency on, bit-identical, hits reported
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_batched_residency_bit_identical_and_reported():
+    """>= 4 concurrent requests through the BatchServer (weights resident
+    by default) return tokens bit-identical to sequential serving, report
+    resident-bank hits, and the engine does zero weight-side encode work
+    after the first request warmed the bank."""
+    from repro.serve.batcher import AdmissionCfg, BatchServer
+    from test_serve import _tiny_engine
+    prompts = [np.array([[1 + i, 2 + i]], dtype=np.int32)
+               for i in range(4)]
+    n_new = 2
+
+    eng_seq = _tiny_engine()
+    enc = apc.get_registry().counter("mac.weight_encodes")
+    seq = [eng_seq.generate(p, n_new) for p in prompts]
+    before = enc.value
+    eng_seq.generate(prompts[0], n_new)         # bank is warm: no encodes
+    assert enc.value == before
+
+    eng = _tiny_engine()
+    with BatchServer(eng, admission=AdmissionCfg(max_inflight=8)) as srv:
+        handles = [srv.submit(p, n_new) for p in prompts]
+        results = [(h.result(timeout=300), h.ap_report()) for h in handles]
+    for (bt, br), st_ in zip(results, seq):
+        assert np.array_equal(bt, st_)
+        assert br["resident_hits"] > 0
+        assert br["resident_hit_rate"] > 0.0
+        assert 0.0 < br["weight_sparsity"] < 1.0
+    store = eng.ap_ctx.cache_stats()["resident"]
+    assert store["hits"] > 0 and store["currsize"] > 0
