@@ -11,7 +11,12 @@ Each sweep point is recorded as one row of the ``ap_serve`` trajectory::
 
     {"bench": "ap_serve", "offered_rps": ..., "achieved_rps": ...,
      "p50_ms": ..., "p99_ms": ..., "n_requests": ..., "max_inflight": ...,
-     "n_waves": ..., "merge_ratio": ...}
+     "n_waves": ..., "queued": ..., "rejected": ..., "max_queue_depth": ...}
+
+The admission-control columns record how load shedding behaved at that
+offered rate: ``queued`` counts requests that waited in the pending deque
+at least once, ``rejected`` counts policy="reject" sheds, and
+``max_queue_depth`` is the deepest the pending deque ever got.
 
 Usage::
 
@@ -78,6 +83,8 @@ def run_load_point(offered_rps: float, n_requests: int, *,
         for h in handles:
             h.result(timeout=600)
         n_waves = srv.n_waves
+        n_queued, n_rejected = srv.n_queued, srv.n_rejected
+        max_queue_depth = srv.max_queue_depth
     wall = time.perf_counter() - t0
     lats = np.asarray([h.latency_ms for h in handles], np.float64)
     row = {
@@ -92,11 +99,15 @@ def run_load_point(offered_rps: float, n_requests: int, *,
         "n_new": n_new,
         "max_inflight": max_inflight,
         "n_waves": n_waves,
+        "queued": n_queued,
+        "rejected": n_rejected,
+        "max_queue_depth": max_queue_depth,
         "wall_s": round(wall, 3),
     }
     print(f"ap_serve offered={row['offered_rps']}rps "
           f"achieved={row['achieved_rps']}rps p50={row['p50_ms']}ms "
-          f"p99={row['p99_ms']}ms waves={n_waves}")
+          f"p99={row['p99_ms']}ms waves={n_waves} queued={n_queued} "
+          f"depth={max_queue_depth}")
     return row
 
 

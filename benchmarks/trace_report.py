@@ -86,6 +86,39 @@ def check_attribution(tracer: trace.Tracer, eng: Engine) -> None:
     assert e_trace == e_ctx, (e_trace, e_ctx)
 
 
+def check_power(report: dict, events: list) -> None:
+    """Power observability invariants: the report's per-array power rollup
+    integrates to the request's Table XI energy bit-exactly, and the
+    exported trace carries counter ("C") tracks for it."""
+    pw = report["power"]
+    assert pw["energy_j"] == report["energy_total_j"], \
+        (pw["energy_j"], report["energy_total_j"])
+    assert pw["per_array"], "power rollup has no per-array entries"
+    counters = [e for e in events if e["ph"] == "C"]
+    assert counters, "trace export carries no power counter events"
+    names = {e["name"] for e in counters}
+    assert "ap.power" in names and "ap.power.bank" in names, names
+
+
+def print_power_table(report: dict) -> None:
+    """Per-array power rollup table (``--power``)."""
+    pw = report["power"]
+    print("\n== per-array power (Table XI energy / model time) ==")
+    hdr = f"{'array':<12}{'energy (J)':>14}{'busy (ns)':>12}" \
+          f"{'avg (W)':>12}{'peak (W)':>12}"
+    print(hdr)
+    print("-" * len(hdr))
+    for track, e in pw["per_array"].items():
+        print(f"{track:<12}{e['energy_j']:>14.3e}{e['busy_ns']:>12.1f}"
+              f"{e['avg_w']:>12.4f}{e['peak_w']:>12.4f}")
+    print("-" * len(hdr))
+    print(f"{'BANK':<12}{pw['energy_j']:>14.3e}"
+          f"{pw['model_span_ns']:>12.1f}{pw['avg_w']:>12.4f}"
+          f"{pw['peak_w']:>12.4f}")
+    print(f"  hottest array: {pw['hottest_array']}   "
+          f"timelines folded: {pw['n_timelines']}")
+
+
 def print_tables(tracer: trace.Tracer, report: dict) -> None:
     print("\n== per-phase cycle/energy attribution ==")
     hdr = f"{'phase':<12}{'programs':>9}{'compare':>10}{'write':>10}" \
@@ -137,6 +170,8 @@ def main(argv=None) -> int:
                      help="decode steps in the traced request")
     ap_.add_argument("--smoke", action="store_true",
                      help="CI mode: validate + assert, minimal printing")
+    ap_.add_argument("--power", action="store_true",
+                     help="print the per-array power rollup table")
     args = ap_.parse_args(argv)
 
     eng = build_engine()
@@ -145,6 +180,7 @@ def main(argv=None) -> int:
     doc = tracer.to_chrome()
     events = trace.validate_chrome_trace(doc)
     check_attribution(tracer, eng)
+    check_power(report, events)
     assert report["phases"], "tracer active but report carries no phases"
 
     out = Path(args.out)
@@ -153,14 +189,17 @@ def main(argv=None) -> int:
     spans = sum(1 for e in events if e["ph"] == "X")
     model = sum(1 for e in events
                 if e["ph"] == "X" and e["pid"] == trace.MODEL_PID)
+    counters = sum(1 for e in events if e["ph"] == "C")
     print(f"wrote {out} ({len(events)} events: {spans} spans, "
-          f"{model} model-time slices, "
+          f"{model} model-time slices, {counters} power samples, "
           f"{len(tracer.attributions)} attributions) — "
           f"open at https://ui.perfetto.dev")
     if args.smoke:
-        print("smoke OK: schema valid, attribution bit-exact")
+        print("smoke OK: schema valid, attribution + power bit-exact")
         return 0
     print_tables(tracer, report)
+    if args.power:
+        print_power_table(report)
     return 0
 
 

@@ -79,10 +79,12 @@ Typical use::
 or via the drivers: ``repro.core.ap.ripple_add(..., engine="apc")``.
 """
 from . import exec as exec  # noqa: PLC0414 — re-export the module
+# (power.py joins graph_makespan schedules with TracedStats counters into
+# per-array power/thermal timelines; see its module docstring)
 from . import (caches as caches_mod, graph as graph_mod, ir,
                layers as layers_mod, lower, mac, metrics as metrics_mod,
-               pool as pool_mod, runtime as runtime_mod, stats,
-               trace as trace_mod)
+               pool as pool_mod, power as power_mod,
+               runtime as runtime_mod, stats, trace as trace_mod)
 from .caches import (ResidentError, ResidentEvicted, ResidentHandle,
                      ResidentStale, ResidentStore, cache_stats,
                      clear_compile_caches)
@@ -110,6 +112,9 @@ from .mac import (SUPPORT_DENSE, TiledMac, assemble_mac_rows_jnp,
                   matmul_mac_rows, weight_digest)
 from .metrics import MetricsRegistry, get_registry
 from .pool import ArrayPool, resident_enabled, run_mac_tiled, run_pooled
+from .power import (Counters, PowerAccum, PowerInterval, PowerTimeline,
+                    emit_counter_tracks, graph_power, partition_blocks,
+                    pool_power)
 from .stats import TracedStats, accumulate, mac_sparsity, to_ap_stats
 from .trace import (Tracer, current_tracer, global_tracer,
                     reset_global_tracer, tracing, validate_chrome_trace)
@@ -144,5 +149,7 @@ __all__ = [
     "mac_program", "mac_reduce_program", "mac_weight_support",
     "matmul_mac_rows", "weight_digest",
     "ArrayPool", "resident_enabled", "run_mac_tiled", "run_pooled",
+    "power_mod", "Counters", "PowerAccum", "PowerInterval", "PowerTimeline",
+    "emit_counter_tracks", "graph_power", "partition_blocks", "pool_power",
     "TracedStats", "accumulate", "mac_sparsity", "to_ap_stats",
 ]

@@ -166,9 +166,14 @@ class ProgramGraph:
     ``meta`` carries builder-side accounting that is not derivable from
     the nodes alone (sparsity pruning totals, resident hit/miss counts);
     :meth:`repro.apc.layers.APServeContext.run_graph` folds it into the
-    active request sink."""
+    active request sink.
+
+    ``radix`` is a builder-side hint (set by :meth:`add_mac_tiled`) the
+    power exporter uses to price counters through Table XI; ``None``
+    means unknown (generic programs), priced at the default radix 3."""
     nodes: list[GraphNode] = field(default_factory=list)
     meta: dict = field(default_factory=dict)
+    radix: int | None = None
 
     def __len__(self) -> int:
         return len(self.nodes)
@@ -270,6 +275,7 @@ class ProgramGraph:
                     f"resident plane is {rw}x{kw}, rows R={R} K={K} need "
                     f"a [R_w, K] plane with R_w dividing R")
         radix, width = tiled.radix, tiled.width
+        self.radix = radix if self.radix is None else self.radix
         rkey = None if resident is None else (resident.key,
                                               resident.generation)
         if tiled.support is not None:
@@ -345,10 +351,12 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
     flight, or a tail wave that does not fill the bank).
 
     ``record`` (a list, appended in place) captures the schedule itself:
-    one ``{node, array, blocks, start_ns, end_ns, start_cycles,
+    one ``{node, label, array, blocks, start_ns, end_ns, start_cycles,
     end_cycles}`` entry per (node, array) assignment — what the tracer
     renders as the per-device/array model-time timeline
-    (:meth:`repro.apc.trace.Tracer.model_span`).
+    (:meth:`repro.apc.trace.Tracer.model_span`) and what
+    :func:`repro.apc.power.graph_power` joins with per-node traced
+    counters into the per-array power timeline.
     """
     if n_arrays < 1 or n_devices < 1 or rows_per_array < 1:
         raise ValueError(
@@ -381,7 +389,8 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
             free_ns[i] = start_ns + nb * node.block_cycles_ns
             end_ns = max(end_ns, free_ns[i])
             if record is not None:
-                record.append({"node": nid, "array": i, "blocks": nb,
+                record.append({"node": nid, "label": node.label,
+                               "array": i, "blocks": nb,
                                "start_ns": start_ns, "end_ns": free_ns[i],
                                "start_cycles": start,
                                "end_cycles": free[i]})
@@ -489,6 +498,8 @@ def coalesce_graphs(graphs: list[ProgramGraph], *, block_rows: int
     if block_rows < 1:
         raise ValueError(f"block_rows must be >= 1, got {block_rows}")
     merged = ProgramGraph()
+    merged.radix = next((g.radix for g in graphs if g.radix is not None),
+                        None)
     maps: list[dict[int, MergedSlice]] = [{} for _ in graphs]
     levels: list[list[int]] = []
     for g in graphs:
@@ -560,9 +571,15 @@ def _merge_group(merged: ProgramGraph,
 
     # a solo segment whose deps are themselves whole (un-merged) nodes can
     # reuse the original build untouched — the sequential path stays
-    # zero-overhead through coalescing
+    # zero-overhead through coalescing.  "Whole" must mean the slice IS
+    # the entire merged dep (same row count), not merely that it starts
+    # at row 0: a solo node whose sibling deps merged with other graphs'
+    # nodes still needs the slicing wrapper, or its build would consume
+    # the full row-concatenated dep result
     plain_deps = solo and all(
-        sl.res_lo == 0 and sl.rows == sl.res_hi for sl in dep_slices[0])
+        sl.res_lo == 0 and sl.rows == sl.res_hi
+        and sl.rows == merged.nodes[sl.node].rows
+        for sl in dep_slices[0])
 
     if plain_deps:
         build = node0.build

@@ -45,6 +45,7 @@ from .graph import ProgramGraph
 from .mac import (compile_mac_tiled, decode_signed_digits_jnp,
                   encode_weight_digits_jnp, mac_acc_width,
                   mac_weight_support, matmul_mac_rows, weight_digest)
+from .power import PowerAccum, graph_power
 from .runtime import Runtime
 
 __all__ = ["APLinear", "APServeContext", "APSink", "ap_moe_dispatch",
@@ -239,15 +240,28 @@ class APSink:
         self.n_programs = 0
         for k in self.META_KEYS:
             setattr(self, k, 0)
+        # per-request power rollup: per-array Table XI energy + busy time
+        # + peak W, folded from every graph run's (schedule, counters) join
+        self.power = PowerAccum(radix=self.radix, n_masked=N_MASKED_MAC)
         # deferred counter attributions: (traced, compiled, n_rows, label).
         # The batcher defers the device->host counter sync so the host can
         # encode wave k+1 while wave k's launches drain; flush() settles
         # them into ``stats`` (report() flushes implicitly).
         self._deferred: list[tuple] = []
+        # deferred power joins: (schedule, traced_map, labels, n_arrays) —
+        # same deferred-sync contract as ``_deferred``
+        self._deferred_power: list[tuple] = []
 
     def defer(self, traced, compiled, n_rows: int, label: str = "") -> None:
         """Queue one traced-counter attribution without syncing the device."""
         self._deferred.append((traced, compiled, n_rows, label))
+
+    def defer_power(self, schedule: list, traced: dict, labels: dict,
+                    n_arrays_local: int) -> None:
+        """Queue one graph run's power join (schedule intervals + per-node
+        counters) without syncing the device."""
+        self._deferred_power.append((schedule, traced, labels,
+                                     n_arrays_local))
 
     def flush(self) -> None:
         """Settle deferred attributions into ``stats`` (host sync)."""
@@ -255,6 +269,11 @@ class APSink:
         pend, self._deferred = self._deferred, []
         for traced, compiled, n_rows, label in pend:
             accumulate(self.stats, traced, compiled, n_rows, label=label)
+        pend_p, self._deferred_power = self._deferred_power, []
+        for schedule, traced, labels, nal in pend_p:
+            self.power.add(graph_power(
+                schedule, traced, radix=self.radix, n_masked=N_MASKED_MAC,
+                n_arrays_local=nal, labels=labels))
 
     def add_report(self, report: dict) -> None:
         """Fold one graph run's occupancy report into the totals."""
@@ -301,6 +320,10 @@ class APSink:
                                   if total_pins else 0.0),
             "weight_sparsity": (self.weight_zeros / self.weight_digits
                                 if self.weight_digits else 0.0),
+            # per-array power rollup; its energy_j is the SAME integer
+            # counters priced through the SAME Table XI conversion as
+            # energy_total_j, so the two agree bit-exactly
+            "power": self.power.report(),
         }
 
 
@@ -431,8 +454,13 @@ class APServeContext:
             return scope[1].run_graph(self, graph, scope[0])
         with trace.span("serve.graph", cat="serve", n_nodes=len(graph),
                         graph_index=sink.n_graphs):
-            res = self.runtime.run_graph(graph, stats=sink.stats)
+            res = self.runtime.run_graph(graph, stats=sink.stats,
+                                         collect_stats=True)
         sink.add_report(res.report)
+        sink.defer_power(
+            res.schedule, dict(res.traced),
+            {i: n.label for i, n in enumerate(graph.nodes)},
+            self.runtime.pool.n_arrays)
         return res
 
     def cache_stats(self) -> dict:

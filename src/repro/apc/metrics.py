@@ -23,11 +23,34 @@ comparisons).
 """
 from __future__ import annotations
 
+import math
+import re
 import threading
 from typing import Iterable
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
            "get_registry", "REGISTRY"]
+
+_PROM_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    """Sanitize a dotted metric name into a legal Prometheus name
+    (``[a-zA-Z_:][a-zA-Z0-9_:]*``)."""
+    out = _PROM_BAD.sub("_", name)
+    if not out or out[0].isdigit():
+        out = "_" + out
+    return out
+
+
+def _prom_num(v: float) -> str:
+    """Prometheus sample value rendering (NaN/Inf spellings included)."""
+    if isinstance(v, float):
+        if math.isnan(v):
+            return "NaN"
+        if math.isinf(v):
+            return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v)) if isinstance(v, float) else str(v)
 
 
 class Counter:
@@ -120,14 +143,10 @@ class Histogram:
         for v in vs:
             self.observe(v)
 
-    def quantile(self, q: float) -> float:
-        """q in [0, 1]; linear interpolation between closest ranks over the
-        retained window (== ``numpy.percentile(window, 100*q)``); NaN when
-        nothing was observed."""
-        if not 0.0 <= q <= 1.0:
-            raise ValueError(f"quantile must be in [0, 1], got {q}")
-        with self._lock:
-            data = sorted(self._window)
+    @staticmethod
+    def _interp(data: list[float], q: float) -> float:
+        """Linear interpolation between closest ranks over sorted ``data``
+        (== ``numpy.percentile(data, 100*q)``); NaN on empty."""
         n = len(data)
         if n == 0:
             return float("nan")
@@ -139,20 +158,37 @@ class Histogram:
         frac = pos - lo
         return data[lo] * (1.0 - frac) + data[hi] * frac
 
+    def quantile(self, q: float) -> float:
+        """q in [0, 1]; linear interpolation over the retained window; NaN
+        when nothing was observed."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        with self._lock:
+            data = sorted(self._window)
+        return self._interp(data, q)
+
     @property
     def mean(self) -> float:
         return self.total / self.count if self.count else float("nan")
 
     def snapshot(self) -> dict:
+        # copy every field under ONE lock acquisition so the snapshot is
+        # internally consistent under concurrent observe() (count/sum/
+        # min/max/quantiles all describe the same instant); quantiles are
+        # then computed lock-free on the copied window
         with self._lock:
             n = self.count
+            total = self.total
+            mn, mx = self.min, self.max
+            data = sorted(self._window)
         if n == 0:
             return {"count": 0, "sum": 0.0, "min": None, "max": None,
                     "mean": None, "p50": None, "p90": None, "p99": None}
-        return {"count": n, "sum": self.total, "min": self.min,
-                "max": self.max, "mean": self.mean,
-                "p50": self.quantile(0.50), "p90": self.quantile(0.90),
-                "p99": self.quantile(0.99)}
+        return {"count": n, "sum": total, "min": mn, "max": mx,
+                "mean": total / n,
+                "p50": self._interp(data, 0.50),
+                "p90": self._interp(data, 0.90),
+                "p99": self._interp(data, 0.99)}
 
 
 class MetricsRegistry:
@@ -194,6 +230,44 @@ class MetricsRegistry:
         with self._lock:
             items = sorted(self._instruments.items())
         return {name: inst.snapshot() for name, inst in items}
+
+    def to_prometheus(self) -> str:
+        """Render every instrument in the Prometheus text exposition
+        format (version 0.0.4): counters as ``<name>_total``, gauges
+        plain, histograms as summaries (p50/p90/p99 ``quantile`` labels
+        plus ``_sum``/``_count``).  A scrape endpoint or a file tail of
+        :meth:`write_prometheus` shows the serving system's health
+        without a debugger."""
+        with self._lock:
+            items = sorted(self._instruments.items())
+        lines: list[str] = []
+        for name, inst in items:
+            pname = _prom_name(name)
+            if isinstance(inst, Counter):
+                lines.append(f"# TYPE {pname}_total counter")
+                lines.append(f"{pname}_total {inst.snapshot()}")
+            elif isinstance(inst, Gauge):
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f"{pname} {_prom_num(inst.snapshot())}")
+            else:
+                snap = inst.snapshot()
+                lines.append(f"# TYPE {pname} summary")
+                if snap["count"]:
+                    for q, key in ((0.5, "p50"), (0.9, "p90"),
+                                   (0.99, "p99")):
+                        lines.append(
+                            f'{pname}{{quantile="{q}"}} '
+                            f'{_prom_num(snap[key])}')
+                lines.append(f"{pname}_sum {_prom_num(snap['sum'])}")
+                lines.append(f"{pname}_count {snap['count']}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def write_prometheus(self, path: str) -> str:
+        """Dump :meth:`to_prometheus` to ``path``; returns the path."""
+        text = self.to_prometheus()
+        with open(path, "w") as f:
+            f.write(text)
+        return path
 
     def reset(self) -> None:
         with self._lock:

@@ -171,6 +171,27 @@ class ArrayPool:
                 "compare_cycles": waves * n_compare_cycles,
                 "write_cycles": waves * n_write_cycles}
 
+    def program_ns(self, compiled: CompiledProgram) -> float:
+        """Table-XI-ns duration of one program replay (one wave)."""
+        return (compiled.n_compare_cycles
+                * (T_PRECHARGE_NS + T_EVALUATE_NS)
+                + compiled.n_write_cycles * T_WRITE_NS)
+
+    def block_intervals(self, n_blocks: int, compiled: CompiledProgram
+                        ) -> list[tuple[int, int, int, float, float]]:
+        """The launch grid of one :meth:`run` on the model-time axis:
+        ``(block, array, wave, start_ns, end_ns)`` per block, matching the
+        launch loop exactly (block ``b`` on array ``b % n_arrays`` in wave
+        ``b // n_arrays``, one ``program_ns`` per wave) — the join key
+        :func:`repro.apc.power.pool_power` uses to place each block's
+        traced counters in time."""
+        p_ns = self.program_ns(compiled)
+        out = []
+        for b in range(n_blocks):
+            w, a = divmod(b, self.n_arrays)
+            out.append((b, a, w, w * p_ns, (w + 1) * p_ns))
+        return out
+
     # -- execution ----------------------------------------------------------
 
     def run(self, arr: jax.Array, compiled: CompiledProgram, *,
@@ -235,9 +256,7 @@ class ArrayPool:
         tr = trace.current_tracer()
         n_blocks = self.n_blocks(n_rows)
         run_span = wave_span = None
-        program_ns = (compiled.n_compare_cycles
-                      * (T_PRECHARGE_NS + T_EVALUATE_NS)
-                      + compiled.n_write_cycles * T_WRITE_NS)
+        program_ns = self.program_ns(compiled)
         if tr is not None:
             wall = self.wall_cycles(n_rows, compiled.n_compare_cycles,
                                     compiled.n_write_cycles)

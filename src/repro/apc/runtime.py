@@ -146,14 +146,21 @@ class GraphResult(dict):
     (``stats`` given or ``collect_stats=True``) — the batching layer
     splits these per request slice (:class:`~repro.apc.graph.MergedSlice`)
     to attribute a shared wave's counters exactly.
+
+    ``schedule`` is the occupancy model's per-(node, array) interval
+    record (see :func:`~repro.apc.graph.graph_makespan`) — together with
+    ``traced`` it is everything :func:`repro.apc.power.graph_power` needs
+    to build the per-array power timeline.
     """
 
     def __init__(self, results: dict[int, jax.Array],
                  report: dict[str, float],
-                 traced: dict[int, "TracedStats | None"] | None = None):
+                 traced: dict[int, "TracedStats | None"] | None = None,
+                 schedule: list[dict] | None = None):
         super().__init__(results)
         self.report = report
         self.traced = traced or {}
+        self.schedule = schedule or []
 
 
 class Runtime:
@@ -306,9 +313,10 @@ class Runtime:
                     accumulate(stats, tr, nodes[nid].compiled,
                                n_rows=nodes[nid].rows,
                                label=nodes[nid].label or f"node{nid}")
-            rec: list | None = [] if tracer is not None else None
+            rec: list = []
             res = GraphResult(results, self.makespan(graph, record=rec),
-                              traced=dict(traced) if collect else None)
+                              traced=dict(traced) if collect else None,
+                              schedule=rec)
             if tracer is not None:
                 gspan.set(makespan_cycles=res.report["makespan_cycles"],
                           sequential_cycles=res.report["sequential_cycles"],
@@ -326,6 +334,17 @@ class Runtime:
                         dur_ns=iv["end_ns"] - iv["start_ns"],
                         node=iv["node"], blocks=iv["blocks"],
                         cycles=iv["end_cycles"] - iv["start_cycles"])
+                if collect:
+                    # power counter tracks: the same schedule joined with
+                    # the per-node traced counters (exact partition)
+                    from .power import graph_power, emit_counter_tracks
+                    from .layers import N_MASKED_MAC
+                    tl = graph_power(
+                        rec, res.traced, radix=graph.radix or 3,
+                        n_masked=N_MASKED_MAC,
+                        n_arrays_local=self.pool.n_arrays,
+                        labels={i: n.label for i, n in enumerate(nodes)})
+                    emit_counter_tracks(tracer, tl, base_ns=base)
         self.last_report = res.report
         return res
 

@@ -55,9 +55,10 @@ from typing import Any, Iterator
 
 __all__ = [
     "TRACE_ENV", "Tracer", "SpanRecord", "InstantRecord",
-    "AttributionRecord", "tracing", "disabled", "current_tracer",
-    "global_tracer", "reset_global_tracer", "env_enabled", "span",
-    "instant", "attribute", "traced_compile", "validate_chrome_trace",
+    "AttributionRecord", "CounterRecord", "tracing", "disabled",
+    "current_tracer", "global_tracer", "reset_global_tracer", "env_enabled",
+    "span", "instant", "attribute", "traced_compile",
+    "validate_chrome_trace",
 ]
 
 TRACE_ENV = "REPRO_AP_TRACE"
@@ -99,6 +100,24 @@ class InstantRecord:
     track: str = "host"
     pid: int = HOST_PID
     args: dict = field(default_factory=dict)
+
+
+@dataclass
+class CounterRecord:
+    """One sample of a counter track ("C" phase event).
+
+    A counter track renders as a stacked area chart in Perfetto — the
+    power/thermal timelines use one track per ``devD/arrA`` of the bank
+    plus a bank-total track, sampled on the model-time (pid 1) axis.
+    ``values`` maps series name -> numeric sample; every sample of one
+    track should carry the same series keys.
+    """
+    name: str
+    cat: str
+    ts_ns: int
+    track: str
+    pid: int
+    values: dict
 
 
 @dataclass
@@ -191,7 +210,7 @@ class Tracer:
 
     def __init__(self, meta: dict | None = None, clock=time.perf_counter_ns):
         self.meta = dict(meta or {})
-        self.events: list[SpanRecord | InstantRecord] = []
+        self.events: list[SpanRecord | InstantRecord | CounterRecord] = []
         self.attributions: list[AttributionRecord] = []
         self._stack: list[_OpenSpan] = []
         self._clock = clock
@@ -235,6 +254,28 @@ class Tracer:
             name=name, cat=cat, ts_ns=int(start_ns),
             dur_ns=max(1, int(dur_ns)), track=track, pid=MODEL_PID,
             args=args))
+
+    def counter(self, name: str, *, track: str, ts_ns: float,
+                pid: int = MODEL_PID, cat: str = "power",
+                **values: float) -> None:
+        """Sample a counter track ("C" phase event) at ``ts_ns``.
+
+        Defaults to the model-time timeline (``pid=1``) because the
+        power/thermal series are computed from the occupancy model's
+        schedule, not wall clock.  All values must be numeric; Perfetto
+        renders each track as a stacked area chart.
+        """
+        if not values:
+            raise ValueError(f"counter {name!r} needs at least one value")
+        clean = {}
+        for k, v in values.items():
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                raise TypeError(
+                    f"counter {name!r} value {k}={v!r} is not numeric")
+            clean[k] = float(v)
+        self.events.append(CounterRecord(
+            name=name, cat=cat, ts_ns=max(0, int(ts_ns)), track=track,
+            pid=pid, values=clean))
 
     def current_phase(self) -> str:
         """Category of the innermost open span (``"untracked"`` outside)."""
@@ -335,12 +376,17 @@ class Tracer:
         for ev in self.events:
             base = {"name": ev.name, "cat": ev.cat, "pid": ev.pid,
                     "tid": tid(ev.pid, ev.track),
-                    "ts": ev.ts_ns / 1000.0, "args": ev.args}
+                    "ts": ev.ts_ns / 1000.0,
+                    "args": ev.values if isinstance(ev, CounterRecord)
+                            else ev.args}
             if isinstance(ev, SpanRecord):
                 base["ph"] = "X"
                 base["dur"] = ev.dur_ns / 1000.0
                 if ev.parent is not None:
                     base["args"] = dict(ev.args, parent=ev.parent)
+            elif isinstance(ev, CounterRecord):
+                base["ph"] = "C"
+                base["args"] = ev.values
             else:
                 base["ph"] = "i"
                 base["s"] = "t"
@@ -394,13 +440,22 @@ def validate_chrome_trace(doc: dict) -> list[dict]:
         ph = ev["ph"]
         if ph == "M":
             continue
-        if ph not in ("X", "i"):
+        if ph not in ("X", "i", "C"):
             raise ValueError(f"unexpected phase {ph!r}: {ev!r}")
         if not isinstance(ev.get("ts"), (int, float)) or ev["ts"] < 0:
             raise ValueError(f"event needs ts >= 0: {ev!r}")
         if ph == "X" and (not isinstance(ev.get("dur"), (int, float))
                           or ev["dur"] < 0):
             raise ValueError(f"complete event needs dur >= 0: {ev!r}")
+        if ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                raise ValueError(
+                    f"counter event needs a non-empty args dict: {ev!r}")
+            for k, v in args.items():
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    raise ValueError(
+                        f"counter series {k!r} must be numeric: {ev!r}")
         out.append(ev)
     if not out:
         raise ValueError("trace contains only metadata events")

@@ -1,4 +1,5 @@
 from .batcher import (AdmissionCfg, AdmissionRejected,  # noqa: F401
                       BatchServer, RequestHandle, WaveAborted, WaveMerger)
 from .engine import Engine, Request, ServeCfg  # noqa: F401
+from .monitor import ServeMonitor, SLOCfg  # noqa: F401
 from .queue import ClosedQueue, IterableQueue  # noqa: F401

@@ -63,10 +63,12 @@ from ..apc.layers import APSink, ap_request_scope, ap_serving
 from ..apc.metrics import get_registry
 from ..apc.stats import TracedStats
 from .engine import Engine, Request
+from .monitor import ServeMonitor, SLOCfg
 from .queue import ClosedQueue, IterableQueue
 
 __all__ = ["AdmissionCfg", "AdmissionRejected", "BatchServer",
-           "RequestHandle", "WaveAborted", "WaveMerger"]
+           "RequestHandle", "SLOCfg", "ServeMonitor", "WaveAborted",
+           "WaveMerger"]
 
 
 class WaveAborted(RuntimeError):
@@ -95,7 +97,8 @@ class WaveMerger:
     of one wave.
     """
 
-    def __init__(self, runtime, n_slots: int, *, timeout: float = 120.0):
+    def __init__(self, runtime, n_slots: int, *, timeout: float = 120.0,
+                 track_power: bool = False):
         self.runtime = runtime
         self.n_slots = n_slots
         self._barrier = threading.Barrier(n_slots, timeout=timeout)
@@ -104,7 +107,14 @@ class WaveMerger:
         self._views: list[MergedGraphView | None] = [None] * n_slots
         self._reports: list[dict | None] = [None] * n_slots
         self._accums: list[list[tuple]] = [[] for _ in range(n_slots)]
+        self._power_defers: list[tuple | None] = [None] * n_slots
         self._run_error: BaseException | None = None
+        # when on, the leader also builds the MERGED wave's power timeline
+        # (a host counter sync — gated because it defeats the deferred-
+        # sync overlap; the per-request power joins stay deferred either
+        # way) and records the bank peak in ``last_wave_peak_w``
+        self.track_power = track_power
+        self.last_wave_peak_w: float | None = None
         # per-slot, per-graph-call node profiles
         # (compiled, rows, deps, upload_cycles) — the admission oracle's
         # raw material (upload priced so resident-weight waves cost less)
@@ -142,6 +152,8 @@ class WaveMerger:
         sink.add_report(self._reports[slot])
         for acc in self._accums[slot]:
             sink.defer(*acc)
+        if self._power_defers[slot] is not None:
+            sink.defer_power(*self._power_defers[slot])
         self._graphs[slot] = None
         return view
 
@@ -155,13 +167,18 @@ class WaveMerger:
         self.n_merged_runs += 1
         self.merged_nodes += len(merged)
         self.source_nodes += sum(len(g) for g in graphs)
+        n_arrays_local = self.runtime.pool.n_arrays
         for slot, g in enumerate(graphs):
             m = maps[slot]
             # the standalone occupancy of this request's own graph: the
-            # exact numbers sequential serving would have recorded
-            self._reports[slot] = self.runtime.makespan(g)
+            # exact numbers sequential serving would have recorded (and,
+            # via ``rec``, the schedule its power timeline is placed on)
+            rec: list = []
+            self._reports[slot] = self.runtime.makespan(g, record=rec)
             self._views[slot] = MergedGraphView(res, m, self._reports[slot])
             accums = []
+            traced_map: dict[int, TracedStats] = {}
+            labels: dict[int, str] = {}
             for nid, node in enumerate(g.nodes):
                 sl = m[nid]
                 tr = res.traced.get(sl.node)
@@ -170,7 +187,25 @@ class WaveMerger:
                     if tr is not None else None)
                 accums.append((sliced, node.compiled, node.rows,
                                node.label or f"node{nid}"))
+                if sliced is not None:
+                    traced_map[nid] = sliced
+                labels[nid] = node.label or f"node{nid}"
             self._accums[slot] = accums
+            # the per-request power join stays deferred (lazy device
+            # slices; the sink syncs at flush) — same contract as the
+            # counter defers above
+            self._power_defers[slot] = (rec, traced_map, labels,
+                                        n_arrays_local)
+        if self.track_power:
+            from ..apc.layers import N_MASKED_MAC
+            from ..apc.power import graph_power
+            tl = graph_power(
+                res.schedule, res.traced, radix=merged.radix or 3,
+                n_masked=N_MASKED_MAC, n_arrays_local=n_arrays_local)
+            peak = 0.0
+            for iv in tl.intervals:
+                peak = max(peak, iv.power_w)
+            self.last_wave_peak_w = peak
 
 
 # ---------------------------------------------------------------------------
@@ -296,7 +331,8 @@ class BatchServer:
 
     def __init__(self, engine: Engine, *,
                  admission: AdmissionCfg | None = None,
-                 queue_maxsize: int = 0, wave_timeout: float = 120.0):
+                 queue_maxsize: int = 0, wave_timeout: float = 120.0,
+                 slo: SLOCfg | None = None):
         self.engine = engine
         self.admission = admission or AdmissionCfg()
         self.wave_timeout = wave_timeout
@@ -304,6 +340,14 @@ class BatchServer:
         self._pending: deque[RequestHandle] = deque()
         self._active: list[_Active] = []
         self.n_waves = 0
+        self.monitor = ServeMonitor(slo)
+        # a power SLO needs per-wave bank peaks, which cost a host sync
+        # inside the wave — only pay for it when asked
+        self._track_power = slo is not None and slo.peak_power_w is not None
+        self.n_admitted = 0
+        self.n_rejected = 0
+        self.n_queued = 0
+        self.max_queue_depth = 0
         self._closed = False
         self._last_profile: list[list[tuple]] | None = None
         self._dispatcher = threading.Thread(target=self._dispatch,
@@ -398,6 +442,7 @@ class BatchServer:
                     h._finish(error=e)
                     continue
                 self._active.append(_Active(h, req, sink))
+                self.n_admitted += 1
                 reg.counter("serve.admitted").inc()
             elif self.admission.policy == "reject":
                 h = self._pending.popleft()
@@ -406,9 +451,17 @@ class BatchServer:
                     f"(inflight={len(self._active)}, "
                     f"max_inflight={self.admission.max_inflight}, "
                     f"max_wave_cycles={self.admission.max_wave_cycles})"))
+                self.n_rejected += 1
                 reg.counter("serve.rejected").inc()
             else:
                 break                        # policy=queue: wait
+        # per-handle queued accounting: a request counts as "queued" once,
+        # the first time admission leaves it in the pending deque
+        for h in self._pending:
+            if not getattr(h, "_was_queued", False):
+                h._was_queued = True
+                self.n_queued += 1
+        self.max_queue_depth = max(self.max_queue_depth, len(self._pending))
         reg.gauge("serve.inflight").set(len(self._active))
         reg.gauge("serve.queued").set(len(self._pending))
 
@@ -418,6 +471,7 @@ class BatchServer:
             return
         t0 = time.perf_counter()
         ctx = self.engine.ap_ctx
+        merger = None
         with trace.span("serve.wave", cat="serve", wave=self.n_waves,
                         width=len(stepping)):
             if ctx is None:
@@ -428,7 +482,8 @@ class BatchServer:
                 # passes immediately): one code path, and the wave records
                 # the step profile the admission oracle prices with
                 merger = WaveMerger(ctx.runtime, len(stepping),
-                                    timeout=self.wave_timeout)
+                                    timeout=self.wave_timeout,
+                                    track_power=self._track_power)
                 threads = [threading.Thread(
                     target=self._step_merged,
                     args=(act, ctx, merger, slot),
@@ -444,6 +499,10 @@ class BatchServer:
                         self._last_profile = act.profile
         wave_ms = 1e3 * (time.perf_counter() - t0)
         reg.histogram("serve.wave_ms").observe(wave_ms)
+        self.monitor.observe_wave(
+            wave_ms, inflight=len(stepping), queued=len(self._pending),
+            bank_peak_w=merger.last_wave_peak_w if merger is not None
+            else None)
         for act in stepping:
             if act.error is None and \
                     act.request.pos > act.request.s_prompt:
@@ -491,6 +550,10 @@ class BatchServer:
                 reg.counter("serve.requests").inc()
                 reg.histogram("serve.request_ms").observe(
                     act.handle.latency_ms)
+                self.monitor.observe_request(
+                    act.handle.latency_ms,
+                    power_peak_w=(rep["power"]["peak_w"]
+                                  if rep and rep.get("power") else None))
             else:
                 still.append(act)
         self._active = still

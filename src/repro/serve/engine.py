@@ -157,12 +157,19 @@ class Request:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, mesh, serve: ServeCfg,
-                 ap_ctx=None):
+                 ap_ctx=None, slo=None):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
         self.serve = serve
         self.ap_ctx = ap_ctx
+        # optional live SLO monitor (serve.monitor.ServeMonitor) fed at the
+        # end of every generate(); BatchServer carries its own
+        if slo is not None:
+            from .monitor import ServeMonitor
+            self.monitor = ServeMonitor(slo)
+        else:
+            self.monitor = None
         # host-measured latency breakdown of the last generate() request
         # (always recorded; independent of REPRO_AP_TRACE)
         self.last_latency: dict | None = None
@@ -248,6 +255,13 @@ class Engine:
         }
         reg.counter("serve.requests").inc()
         reg.histogram("serve.request_ms").observe(1e3 * (t_end - t_req))
+        if self.monitor is not None:
+            peak_w = None
+            if self.ap_ctx is not None and self.ap_ctx.n_graphs > 0:
+                # report() flushes the sink's deferred power joins
+                peak_w = self.ap_ctx.report()["power"]["peak_w"]
+            self.monitor.observe_request(1e3 * (t_end - t_req),
+                                         power_peak_w=peak_w)
         return out
 
     def ap_report(self) -> dict | None:

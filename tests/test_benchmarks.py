@@ -225,12 +225,18 @@ def test_serve_bench_load_point_schema():
         sys.path.remove(bench_dir)
     row = run_load_point(8.0, 4, max_inflight=4, s_prompt=2, n_new=2)
     keys = {"bench", "offered_rps", "achieved_rps", "p50_ms", "p99_ms",
-            "mean_ms", "n_requests", "max_inflight", "n_waves", "wall_s"}
+            "mean_ms", "n_requests", "max_inflight", "n_waves", "wall_s",
+            "queued", "rejected", "max_queue_depth"}
     assert keys <= set(row)
     assert row["bench"] == "ap_serve"
     assert row["achieved_rps"] > 0
     assert 0 < row["p50_ms"] <= row["p99_ms"]
     assert row["n_waves"] >= row["s_prompt"] + row["n_new"] - 1
+    # admission accounting: every request either ran straight through or
+    # waited; nothing exceeds the offered request count
+    assert 0 <= row["queued"] <= row["n_requests"]
+    assert row["rejected"] == 0            # block policy: no sheds
+    assert 0 <= row["max_queue_depth"] <= row["n_requests"]
 
 
 def test_apc_bench_json_recorded_ap_serve_rows():
@@ -254,3 +260,76 @@ def test_apc_bench_json_recorded_ap_serve_rows():
         # open loop: achieved throughput cannot exceed what was offered
         # by more than rounding
         assert r["achieved_rps"] <= r["offered_rps"] * 1.05 + 0.5
+        # admission columns (ISSUE 9): recorded rows carry the queue story
+        assert 0 <= r["queued"] <= r["n_requests"]
+        assert 0 <= r["rejected"] <= r["n_requests"]
+        assert 0 <= r["max_queue_depth"] <= r["n_requests"]
+    # queue pressure grows with offered load along the recorded curve
+    assert rows[-1]["queued"] >= rows[0]["queued"]
+
+
+# ---------------------------------------------------------------------------
+# perf-regression sentinel
+# ---------------------------------------------------------------------------
+
+def _sentinel():
+    import os
+    bench_dir = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks")
+    sys.path.insert(0, bench_dir)
+    try:
+        import regression_sentinel
+    finally:
+        sys.path.remove(bench_dir)
+    return regression_sentinel
+
+
+def test_regression_sentinel_smoke_passes_on_recorded():
+    """The recorded apc_bench.json re-derives clean from current code."""
+    assert _sentinel().main(["--smoke"]) == 0
+
+
+def test_regression_sentinel_flags_degraded_fresh_rows(tmp_path, capsys):
+    """A synthetically slowed timing column and a structural drift both
+    trip the sentinel (exit 1, named in the output)."""
+    import json
+    sent = _sentinel()
+    with open(sent.DEFAULT_JSON) as f:
+        doc = json.load(f)
+    ok = tmp_path / "fresh_ok.json"
+    ok.write_text(json.dumps(doc))
+    assert sent.main(["--smoke", "--fresh", str(ok)]) == 0
+
+    bad = json.loads(json.dumps(doc))
+    bad["ap_matmul"][0]["ap_us"] *= 100          # timing regression
+    bad["ap_runtime"][0]["makespan_cycles"] += 1  # occupancy model drift
+    path = tmp_path / "fresh_bad.json"
+    path.write_text(json.dumps(bad))
+    assert sent.main(["--fresh", str(path)]) == 1
+    out = capsys.readouterr().out
+    assert "ap_us regressed" in out
+    assert "makespan_cycles changed" in out
+
+
+def test_regression_sentinel_usage_errors(tmp_path):
+    sent = _sentinel()
+    assert sent.main([]) == 2                    # no mode selected
+    assert sent.main(["--fresh", str(tmp_path / "missing.json")]) == 2
+    broken = tmp_path / "broken.json"
+    broken.write_text("{not json")
+    assert sent.main(["--smoke", "--json", str(broken)]) == 2
+
+
+def test_regression_sentinel_smoke_catches_structural_baseline_drift(
+        tmp_path):
+    """If someone edits a recorded schedule-static column, --smoke fails:
+    the sentinel re-derives it from current code."""
+    import json
+    sent = _sentinel()
+    with open(sent.DEFAULT_JSON) as f:
+        doc = json.load(f)
+    doc["ap_pool"][0]["wall_write_cycles"] += 1
+    doc["ap_kernel"][0]["pack"] += 1
+    path = tmp_path / "tampered.json"
+    path.write_text(json.dumps(doc))
+    assert sent.main(["--smoke", "--json", str(path)]) == 1

@@ -127,6 +127,100 @@ def test_histogram_window_bounds_memory():
     assert h.quantile(0.0) >= 92.0
 
 
+def test_histogram_snapshot_consistent_under_concurrent_observe():
+    """snapshot() copies every field under one lock acquisition, so the
+    returned dict is internally consistent even while observers hammer
+    the histogram from other threads."""
+    import threading
+    h = metrics.Histogram("h")
+    stop = threading.Event()
+
+    def writer(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            h.observe(float(rng.uniform(0.0, 100.0)))
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(200):
+            snap = h.snapshot()
+            if snap["count"] == 0:
+                continue
+            assert snap["min"] <= snap["mean"] <= snap["max"]
+            assert snap["min"] <= snap["p50"] <= snap["p99"] <= snap["max"]
+            assert snap["sum"] == pytest.approx(
+                snap["mean"] * snap["count"])
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    final = h.snapshot()
+    assert final["count"] == h.count
+
+
+def test_registry_concurrent_8_threads():
+    """8 threads bumping the same instruments: no lost updates, no
+    get-or-create races (each name resolves to ONE instrument)."""
+    import threading
+    reg = metrics.MetricsRegistry()
+    n_threads, n_iter = 8, 500
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        barrier.wait()
+        for i in range(n_iter):
+            reg.counter("c").inc()
+            reg.gauge(f"g{tid}").set(i)
+            reg.histogram("h").observe(float(i))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = reg.snapshot()
+    assert snap["c"] == n_threads * n_iter
+    assert snap["h"]["count"] == n_threads * n_iter
+    for tid in range(n_threads):
+        assert snap[f"g{tid}"] == n_iter - 1
+    # text exposition renders cleanly after the stampede
+    text = reg.to_prometheus()
+    assert f"c_total {n_threads * n_iter}" in text
+
+
+def test_to_prometheus_text_format():
+    reg = metrics.MetricsRegistry()
+    reg.counter("serve.slo.latency_breaches").inc(2)
+    reg.gauge("pool.occupancy").set(0.75)
+    h = reg.histogram("serve.request_ms")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    reg.histogram("empty.hist")
+    text = reg.to_prometheus()
+    lines = text.splitlines()
+    assert "# TYPE serve_slo_latency_breaches_total counter" in lines
+    assert "serve_slo_latency_breaches_total 2" in lines
+    assert "# TYPE pool_occupancy gauge" in lines
+    assert "pool_occupancy 0.75" in lines
+    assert "# TYPE serve_request_ms summary" in lines
+    assert 'serve_request_ms{quantile="0.5"} 2.5' in lines
+    assert "serve_request_ms_sum 10.0" in lines
+    assert "serve_request_ms_count 4" in lines
+    # empty histograms render sum/count but no quantile samples
+    assert "empty_hist_count 0" in lines
+    assert not any(l.startswith("empty_hist{") for l in lines)
+    # names are sanitized to [a-zA-Z0-9_:] and values parse as floats
+    for l in lines:
+        if l.startswith("#"):
+            continue
+        name, val = l.rsplit(" ", 1)
+        assert metrics._PROM_BAD.search(name.split("{")[0]) is None
+        float(val)                        # must parse
+
+
 def test_registry_types_and_reset():
     reg = metrics.MetricsRegistry()
     reg.counter("c").inc(3)
@@ -180,6 +274,61 @@ def test_validate_chrome_trace_rejects_bad_docs():
     with pytest.raises(ValueError):
         trace.validate_chrome_trace(
             {"traceEvents": [{"ph": "X", "name": "a"}]})  # missing fields
+
+
+def test_counter_events_roundtrip_chrome():
+    t = trace.Tracer()
+    t.counter("ap.power", track="power dev0/arr0", ts_ns=100.0,
+              power_w=1.5, thermal_w=0.5)
+    t.counter("ap.power.bank", track="power bank", ts_ns=200.0,
+              total_w=2.0)
+    doc = json.loads(json.dumps(t.to_chrome()))
+    events = trace.validate_chrome_trace(doc)
+    cs = [e for e in events if e["ph"] == "C"]
+    assert len(cs) == 2
+    by_name = {e["name"]: e for e in cs}
+    assert by_name["ap.power"]["args"] == \
+        {"power_w": 1.5, "thermal_w": 0.5}
+    assert by_name["ap.power.bank"]["args"] == {"total_w": 2.0}
+    # both ride the model (pid 1) timeline, on named counter tracks
+    assert all(e["pid"] == trace.MODEL_PID for e in cs)
+    assert by_name["ap.power"]["ts"] == pytest.approx(0.1)   # ns -> µs
+    tids = {e["tid"] for e in cs}
+    named = {m["args"]["name"] for m in doc["traceEvents"]
+             if m["ph"] == "M" and m["name"] == "thread_name"
+             and m["tid"] in tids}
+    assert named == {"power dev0/arr0", "power bank"}
+
+
+def test_counter_rejects_malformed_values():
+    t = trace.Tracer()
+    with pytest.raises(ValueError):
+        t.counter("c", track="t", ts_ns=0.0)           # no series values
+    with pytest.raises(TypeError):
+        t.counter("c", track="t", ts_ns=0.0, v="high")  # non-numeric
+    with pytest.raises(TypeError):
+        t.counter("c", track="t", ts_ns=0.0, v=True)   # bools excluded
+
+
+def test_validate_chrome_trace_rejects_malformed_counter_events():
+    def doc(args):
+        ev = {"ph": "C", "name": "c", "cat": "power", "pid": 1, "tid": 0,
+              "ts": 1.0}
+        if args is not None:
+            ev["args"] = args
+        return {"traceEvents": [ev]}
+
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace(doc(None))         # args missing
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace(doc({}))           # no series
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace(doc({"v": "hot"}))  # non-numeric
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace(doc({"v": True}))  # bool is not a sample
+    # a well-formed counter passes
+    events = trace.validate_chrome_trace(doc({"v": 1.0}))
+    assert events[0]["ph"] == "C"
 
 
 # ---------------------------------------------------------------------------
