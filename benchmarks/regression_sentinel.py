@@ -101,6 +101,12 @@ TRAJECTORIES = {
         "exact": ("s_prompt", "n_new"),
         "rel": 3.0,
     },
+    "ap_faults": {
+        "key": ("flip_rate", "n_dead"),
+        "timing": ("p50_ms", "p99_ms", "wall_s"),
+        "exact": ("n_arrays", "n_requests", "n_new", "seed"),
+        "rel": 3.0,
+    },
 }
 
 
@@ -262,6 +268,47 @@ def check_ap_serve(rows: list[dict]) -> list[str]:
     return problems
 
 
+def check_ap_faults(rows: list[dict]) -> list[str]:
+    """Fault-sweep schema + recovery invariants (host-independent): the
+    zero-rate point is clean by seeding, detection work scales with the
+    injected rate, and the surviving-bank accounting balances."""
+    required = ("flip_rate", "n_dead", "seed", "n_arrays", "n_requests",
+                "n_new", "achieved_rps", "p50_ms", "p99_ms", "detected",
+                "retries", "checksum_runs", "retired", "surviving_arrays",
+                "wall_s")
+    problems = []
+    for r in rows:
+        tag = f"ap_faults flip{r.get('flip_rate')}d{r.get('n_dead')}"
+        missing = [c for c in required if c not in r]
+        if missing:
+            problems.append(f"{tag}: missing columns {missing}")
+            continue
+        if not (0 < r["p50_ms"] <= r["p99_ms"]) or r["achieved_rps"] <= 0:
+            problems.append(f"{tag}: degenerate latency/throughput row")
+        if r["flip_rate"] == 0 and (r["detected"] or r["retries"]):
+            problems.append(
+                f"{tag}: zero-rate point recorded fault activity "
+                f"(detected={r['detected']}, retries={r['retries']})")
+        if r["checksum_runs"] <= 0:
+            problems.append(f"{tag}: checksum verify path never ran")
+        if r["retries"] > r["detected"]:
+            problems.append(f"{tag}: more retries than detections")
+        want_surv = r["n_arrays"] - r["n_dead"] - r["retired"]
+        if r["surviving_arrays"] != want_surv:
+            problems.append(
+                f"{tag}: surviving_arrays {r['surviving_arrays']} != "
+                f"n_arrays - n_dead - retired = {want_surv}")
+    if rows:
+        if not any(r["flip_rate"] == 0 for r in rows):
+            problems.append("ap_faults: no zero-rate baseline point")
+        top = max(rows, key=lambda r: r["flip_rate"])
+        if top["flip_rate"] > 0 and top["detected"] <= 0:
+            problems.append(
+                "ap_faults: max-rate point detected nothing — the "
+                "injector or the checksum path is dead")
+    return problems
+
+
 def check_trace_overhead(row: dict) -> list[str]:
     problems = []
     compiled = apc.compile_named(row["op"], row["radix"], row["width"])
@@ -297,6 +344,7 @@ STRUCTURAL_CHECKS = {
     "ap_runtime": check_ap_runtime,
     "ap_sparse": check_ap_sparse,
     "ap_serve": check_ap_serve,
+    "ap_faults": check_ap_faults,
     "trace_overhead": check_trace_overhead,
 }
 

@@ -49,8 +49,13 @@ from repro.serve.batcher import AdmissionCfg, BatchServer     # noqa: E402
 from repro.serve.engine import Engine, ServeCfg               # noqa: E402
 
 
-def build_engine(*, n_arrays: int = 4, rows: int = 64) -> Engine:
-    """Smallest Engine whose MLPs really run on the AP runtime."""
+def build_engine(*, n_arrays: int = 4, rows: int = 64,
+                 faults=None) -> Engine:
+    """Smallest Engine whose MLPs really run on the AP runtime.
+
+    ``faults`` (a :class:`repro.apc.FaultConfig`) installs the seeded
+    device fault model on the bank — the faults_bench sweep and the
+    degraded-bank smoke gate use it."""
     base = get_smoke_config("qwen3-0.6b")
     cfg = base.with_(n_layers=1, d_model=16, d_ff=24, n_heads=2,
                      n_kv_heads=2, head_dim=8, vocab=32,
@@ -58,7 +63,8 @@ def build_engine(*, n_arrays: int = 4, rows: int = 64) -> Engine:
     mesh = make_smoke_mesh()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     qparams = quantize_model_params(params)
-    pool = apc.ArrayPool(n_arrays=n_arrays, rows=rows, cols=64)
+    pool = apc.ArrayPool(n_arrays=n_arrays, rows=rows, cols=64,
+                         faults=faults)
     ctx = apc.APServeContext(apc.Runtime(pool), x_levels=7)
     return Engine(cfg, qparams, mesh, ServeCfg(max_len=8), ap_ctx=ctx)
 
@@ -111,6 +117,29 @@ def run_load_point(offered_rps: float, n_requests: int, *,
     return row
 
 
+def degraded_bank_smoke(*, n_requests: int = 3, n_new: int = 2) -> None:
+    """CI gate: serving stays green on a degraded bank (one array retired
+    at construction), with tokens identical to the pristine bank's."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 32, size=(1, 3)) for _ in range(n_requests)]
+
+    eng_ok = build_engine()
+    want = [np.asarray(eng_ok.generate(p, n_new)) for p in prompts]
+
+    eng = build_engine(faults=apc.FaultConfig(dead_arrays=(1,)))
+    with BatchServer(eng, admission=AdmissionCfg(max_inflight=4)) as srv:
+        handles = [srv.submit(p, n_new) for p in prompts]
+        got = [np.asarray(h.result(timeout=600)) for h in handles]
+        n_waves = srv.n_waves
+    assert n_waves > 0
+    assert eng.ap_ctx.runtime.pool.dead_arrays == (1,)
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert np.array_equal(g, w), \
+            f"degraded-bank smoke: request {i} tokens diverged"
+    print(f"degraded-bank smoke: {n_requests} requests on 3/4 arrays, "
+          f"tokens bit-identical to the pristine bank")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
@@ -125,6 +154,8 @@ def main() -> None:
     else:
         points = [(0.5, 8), (2.0, 12), (8.0, 16), (32.0, 16)]
     rows = [run_load_point(rps, n) for rps, n in points]
+    if args.smoke:
+        degraded_bank_smoke()
     if args.record:
         with open(args.json) as f:
             doc = json.load(f)

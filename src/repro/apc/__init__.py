@@ -89,6 +89,8 @@ from .caches import (ResidentError, ResidentEvicted, ResidentHandle,
                      ResidentStale, ResidentStore, cache_stats,
                      clear_compile_caches)
 from .exec import execute, execute_sharded, run
+from .faults import (FaultConfig, FaultDetected, FaultModel,
+                     fault_config_from_env, faults_enabled)
 from .graph import (CARRIED, FoldStage, GraphNode, ProgramGraph,
                     fold_stage_input, graph_makespan, mac_fold_plan)
 from .layers import (APLinear, APServeContext, APSink, ap_moe_dispatch,
@@ -111,7 +113,8 @@ from .mac import (SUPPORT_DENSE, TiledMac, assemble_mac_rows_jnp,
                   mac_program, mac_reduce_program, mac_weight_support,
                   matmul_mac_rows, weight_digest)
 from .metrics import MetricsRegistry, get_registry
-from .pool import ArrayPool, resident_enabled, run_mac_tiled, run_pooled
+from .pool import (ArrayPool, drain_fault_charges, resident_enabled,
+                   run_mac_tiled, run_pooled)
 from .power import (Counters, PowerAccum, PowerInterval, PowerTimeline,
                     emit_counter_tracks, graph_power, partition_blocks,
                     pool_power)
@@ -129,6 +132,8 @@ __all__ = [
     "ResidentError", "ResidentEvicted", "ResidentHandle", "ResidentStale",
     "ResidentStore",
     "execute", "execute_sharded", "run",
+    "FaultConfig", "FaultDetected", "FaultModel", "fault_config_from_env",
+    "faults_enabled", "drain_fault_charges",
     "CARRIED", "FoldStage", "GraphNode", "ProgramGraph", "fold_stage_input",
     "graph_makespan", "mac_fold_plan",
     "APLinear", "APServeContext", "APSink", "ap_moe_dispatch",

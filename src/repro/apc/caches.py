@@ -167,6 +167,7 @@ def registry() -> dict:
         "lut_blocked": blocked._build_lut_blocked_cached,
         "compile_steps": lower._compile_steps,
         "compile_named": lower._compile_named_cached,
+        "compile_checksum": lower._compile_checksum_cached,
         "compile_mac": mac._compile_mac_cached,
         "compile_mac_reduce": mac._compile_mac_reduce_cached,
         "compile_mac_tiled": mac._compile_mac_tiled_cached,

@@ -39,14 +39,43 @@ import jax
 import jax.numpy as jnp
 
 from ..core.energy import T_EVALUATE_NS, T_PRECHARGE_NS, T_WRITE_NS
-from .caches import ResidentHandle
+from . import trace
+from .caches import ResidentEvicted, ResidentHandle, ResidentStale
 from .lower import CompiledProgram
+from .metrics import get_registry
 from .mac import (TiledMac, assemble_mac_rows_jnp, encode_mac_rows_jnp,
                   encode_mac_x_rows_jnp, mac_layout)
 
 T_COMPARE_NS = T_PRECHARGE_NS + T_EVALUATE_NS
 
 CARRIED = -1          # fold-plan sentinel: previous stage's folded result
+
+
+def _resolve_or_repin(handle: ResidentHandle):
+    """A resident handle's digit plane, surviving store churn.
+
+    Graphs are built (handles pinned) before they execute, so a bounded
+    store under concurrent serving can evict — or re-pin under the same
+    key — between pin and node build.  Eviction is recoverable: the
+    handle carries its own plane copy, so re-pin the same content and
+    continue (a re-upload, not a failure; ``resident.repins`` counts it).
+    A re-pin under the key is recoverable only while the live digest
+    still matches the handle's (a newer pin epoch of identical content);
+    a genuine weight swap propagates :class:`ResidentStale` — the graph
+    was built against columns that no longer exist."""
+    try:
+        return handle.resolve()
+    except ResidentEvicted:
+        plane = handle.store.pin(handle.key, handle.digest,
+                                 lambda: handle.plane).plane
+    except ResidentStale:
+        cur = handle.store.get(handle.key)
+        if cur is None or cur.digest != handle.digest:
+            raise
+        plane = cur.plane
+    get_registry().counter("resident.repins").inc()
+    trace.instant("resident_repin", cat="pool", key=handle.key)
+    return plane
 
 
 class FoldStage(NamedTuple):
@@ -297,7 +326,7 @@ class ProgramGraph:
                                                radix, width)
             else:
                 def build_tile(*, _lo=lo, _hi=hi, _h=resident):
-                    wd = _h.resolve()[:, _lo:_hi]   # raises if stale
+                    wd = _resolve_or_repin(_h)[:, _lo:_hi]
                     if R // wd.shape[0] > 1:
                         wd = jnp.tile(wd, (R // wd.shape[0], 1))
                     return assemble_mac_rows_jnp(
@@ -332,7 +361,8 @@ class ProgramGraph:
 
 def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
                    rows_per_array: int, n_devices: int = 1,
-                   record: list | None = None) -> dict[str, float]:
+                   record: list | None = None,
+                   dead_arrays: tuple[int, ...] = ()) -> dict[str, float]:
     """List-schedule the graph onto ``n_arrays * n_devices`` arrays.
 
     Each node expands into ``ceil(rows / rows_per_array)`` block-tasks of
@@ -357,12 +387,25 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
     (:meth:`repro.apc.trace.Tracer.model_span`) and what
     :func:`repro.apc.power.graph_power` joins with per-node traced
     counters into the per-array power timeline.
+
+    ``dead_arrays`` names retired arrays (fault-model degradation): their
+    slots take no blocks — array identity is preserved in ``record`` —
+    and both the pipelined and sequential prices reprice over the
+    surviving ``n_arrays_alive`` arrays.
     """
     if n_arrays < 1 or n_devices < 1 or rows_per_array < 1:
         raise ValueError(
             f"pool geometry must be positive, got n_arrays={n_arrays}, "
             f"n_devices={n_devices}, rows={rows_per_array}")
     total = n_arrays * n_devices
+    dead = frozenset(dead_arrays)
+    if any(not 0 <= d < total for d in dead):
+        raise ValueError(f"dead_arrays {sorted(dead)} outside bank of "
+                         f"{total} arrays")
+    alive = [i for i in range(total) if i not in dead]
+    if not alive:
+        raise ValueError("every array is retired — nothing to schedule on")
+    n_alive = len(alive)
     free = [0] * total
     free_ns = [0.0] * total
     finish: list[int] = []
@@ -374,9 +417,9 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
         ready_ns = max((finish_ns[d] for d in node.deps), default=0.0)
         blocks = max(1, math.ceil(node.rows / rows_per_array))
         end, end_ns = ready, ready_ns
-        order = sorted(range(total), key=free.__getitem__)
+        order = sorted(alive, key=free.__getitem__)
         for j, i in enumerate(order):
-            nb = blocks // total + (1 if j < blocks % total else 0)
+            nb = blocks // n_alive + (1 if j < blocks % n_alive else 0)
             if nb == 0:
                 break
             start = max(free[i], ready)
@@ -396,7 +439,10 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
                                "end_cycles": free[i]})
         finish.append(end)
         finish_ns.append(end_ns)
-        waves = math.ceil(math.ceil(blocks / n_devices) / n_arrays)
+        if dead:
+            waves = math.ceil(blocks / n_alive)
+        else:
+            waves = math.ceil(math.ceil(blocks / n_devices) / n_arrays)
         seq += waves * node.block_cycles
         seq_ns += waves * node.block_cycles_ns
     return {"makespan_cycles": max(finish, default=0),
@@ -404,6 +450,7 @@ def graph_makespan(graph: ProgramGraph, *, n_arrays: int,
             "makespan_ns": max(finish_ns, default=0.0),
             "sequential_ns": seq_ns,
             "n_arrays_total": total,
+            "n_arrays_alive": n_alive,
             "n_nodes": len(graph.nodes)}
 
 

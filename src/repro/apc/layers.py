@@ -275,6 +275,30 @@ class APSink:
                 schedule, traced, radix=self.radix, n_masked=N_MASKED_MAC,
                 n_arrays_local=nal, labels=labels))
 
+    # everything a merged serve WAVE can mutate: the occupancy scalars +
+    # meta counters (add_report/add_meta) and the deferred lists (defer/
+    # defer_power).  stats and power only move at flush(), which the
+    # batcher never calls mid-wave — so a scalar snapshot + list lengths
+    # is a complete wave-granular checkpoint.
+    _WAVE_SCALARS = ("makespan_cycles", "sequential_cycles", "makespan_ns",
+                     "sequential_ns", "n_graphs", "n_programs") + META_KEYS
+
+    def checkpoint(self) -> tuple:
+        """Snapshot the wave-mutable state (see ``_WAVE_SCALARS``): the
+        batcher takes one before each merged wave so an aborted sibling
+        can roll back and re-run solo without double-charging."""
+        scalars = {k: getattr(self, k) for k in self._WAVE_SCALARS}
+        return (scalars, len(self._deferred), len(self._deferred_power))
+
+    def restore(self, ck: tuple) -> None:
+        """Roll back to a :meth:`checkpoint` (scalars reset, deferred
+        lists truncated to their checkpointed lengths)."""
+        scalars, n_def, n_pow = ck
+        for k, v in scalars.items():
+            setattr(self, k, v)
+        del self._deferred[n_def:]
+        del self._deferred_power[n_pow:]
+
     def add_report(self, report: dict) -> None:
         """Fold one graph run's occupancy report into the totals."""
         self.makespan_cycles += report["makespan_cycles"]

@@ -455,6 +455,38 @@ def elementwise_program(lut2: LUT, width: int, a_base: int = 0,
                      (ApplyLUT(lut2, (a_base + i, b_base + i)),)),)
 
 
+def checksum_program(n_cols: int, radix: int, cs_col: int | None = None
+                     ) -> Program:
+    """Mod-r row checksum fold: ``cs <- sum(col_0..col_{n-1}) mod r``.
+
+    The fault-detection program (:mod:`repro.apc.faults`): zero the
+    checksum column, then fold every data column in with the ``modsum``
+    2-input LUT (``(a, b) -> (a, (a+b) mod r)``).  Compiling it through
+    the normal IR means every compare/write cycle of detection is priced
+    by the same schedule-static accounting as real programs — checksum
+    verification shows up honestly in ``APStats``.
+    """
+    if n_cols < 1:
+        raise ValueError(f"need at least one data column, got {n_cols}")
+    cs = n_cols if cs_col is None else cs_col
+    lut = build_lut_nonblocked(tt.REGISTRY["modsum"](radix))
+    return (ZeroCol(cs),) + tuple(ApplyLUT(lut, (c, cs))
+                                  for c in range(n_cols))
+
+
+@functools.lru_cache(maxsize=64)
+def _compile_checksum_cached(n_cols: int, radix: int) -> CompiledProgram:
+    return compile_program(checksum_program(n_cols, radix))
+
+
+def compile_checksum(n_cols: int, radix: int) -> CompiledProgram:
+    """Compiled mod-r checksum fold over ``n_cols`` data columns, writing
+    column ``n_cols`` (cached; registered in :mod:`repro.apc.caches`)."""
+    return trace.traced_compile(
+        "compile_checksum", _compile_checksum_cached, n_cols, radix,
+        _label=f"checksum:{n_cols}c:r{radix}")
+
+
 # ---------------------------------------------------------------------------
 # Whole-program cache keyed on (fn, radix, width)
 # ---------------------------------------------------------------------------

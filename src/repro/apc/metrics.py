@@ -226,6 +226,12 @@ class MetricsRegistry:
     def histogram(self, name: str, max_samples: int = 4096) -> Histogram:
         return self._get(name, Histogram, max_samples)
 
+    def counter_values(self, names) -> dict[str, int]:
+        """Current values of the named counters, creating any that do not
+        exist yet — so delta-baseline sampling (e.g. the serve monitor's
+        fault counters) is race-free against later increments."""
+        return {n: self.counter(n).value for n in names}
+
     def snapshot(self) -> dict:
         with self._lock:
             items = sorted(self._instruments.items())

@@ -42,14 +42,18 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.ap import APStats
 from ..core.energy import T_EVALUATE_NS, T_PRECHARGE_NS, T_WRITE_NS
 from ..kernels.tap_pass.kernel import tap_run_program
 from ..kernels.tap_pass.ops import _pad_rows
 from . import trace
-from .caches import ResidentHandle, ResidentStore
-from .lower import CompiledProgram, resolve_schedule
+from .caches import (ResidentEvicted, ResidentHandle, ResidentStale,
+                     ResidentStore)
+from .faults import (FaultConfig, FaultDetected, FaultModel, expected_checksum,
+                     fault_config_from_env, faults_enabled, validate_digits)
+from .lower import CompiledProgram, compile_checksum, resolve_schedule
 from .metrics import get_registry
 from .mac import (TiledMac, assemble_mac_rows_jnp, decode_signed_digits_jnp,
                   encode_mac_rows_jnp, encode_mac_x_rows_jnp,
@@ -73,7 +77,8 @@ class ArrayPool:
     def __init__(self, n_arrays: int = 4, rows: int = 4096,
                  cols: int = 256, *, kernel_variant: str | None = None,
                  interpret: bool | None = None, unroll: int | None = None,
-                 resident_slots: int = 256):
+                 resident_slots: int = 256,
+                 faults: FaultConfig | None = None):
         if n_arrays < 1:
             raise ValueError(f"n_arrays must be >= 1, got {n_arrays}")
         if rows < 1 or cols < 1:
@@ -81,6 +86,19 @@ class ArrayPool:
         self.n_arrays = n_arrays
         self.rows = rows
         self.cols = cols
+        # device fault model: explicit config wins, else the
+        # REPRO_AP_FAULTS env knob; None keeps every path bit-identical
+        # to a fault-free pool (one attribute check per run)
+        if faults is None and faults_enabled():
+            faults = fault_config_from_env()
+        self.fault_model = (FaultModel(faults, n_arrays, rows, cols)
+                            if faults is not None else None)
+        # honest pricing of fault handling: checksum verifies and retry
+        # replays append (traced, compiled, n_rows, label) charges here;
+        # whichever driver owns the APStats drains them via
+        # consume_fault_charges (bounded so an undrained pool can't grow)
+        self._fault_charges: list[
+            tuple[TracedStats, CompiledProgram, int, str]] = []
         # weight-stationary resident-operand store: digit planes written
         # into the bank once and reused across calls (bounded, visible in
         # caches.cache_stats)
@@ -156,6 +174,39 @@ class ArrayPool:
                       steps=compiled.n_steps, variant=variant)
         return sched, variant, pack
 
+    # -- bank health --------------------------------------------------------
+
+    @property
+    def dead_arrays(self) -> tuple[int, ...]:
+        """Retired array indices (empty without a fault model)."""
+        if self.fault_model is None:
+            return ()
+        return tuple(sorted(self.fault_model.retired))
+
+    def healthy_arrays(self) -> list[int]:
+        """Surviving array indices; raises :class:`FaultDetected` when
+        the whole bank has been retired."""
+        if self.fault_model is None:
+            return list(range(self.n_arrays))
+        h = self.fault_model.healthy()
+        if not h:
+            raise FaultDetected("every array in the bank is retired")
+        return h
+
+    def consume_fault_charges(self) -> list[
+            tuple[TracedStats, CompiledProgram, int, str]]:
+        """Drain the pending checksum/retry stat charges (the caller
+        accumulates them into its APStats)."""
+        out, self._fault_charges = self._fault_charges, []
+        return out
+
+    def _charge(self, traced: TracedStats, compiled: CompiledProgram,
+                n_rows: int, label: str) -> None:
+        if len(self._fault_charges) < 4096:
+            self._fault_charges.append((traced, compiled, n_rows, label))
+        else:
+            get_registry().counter("faults.charges_dropped").inc()
+
     # -- cost model ---------------------------------------------------------
 
     def n_blocks(self, n_rows: int) -> int:
@@ -164,9 +215,12 @@ class ArrayPool:
     def wall_cycles(self, n_rows: int, n_compare_cycles: int,
                     n_write_cycles: int) -> dict[str, int]:
         """Pipelined wall-clock cycles: arrays run blocks in parallel, so a
-        program over ``n_rows`` costs ``ceil(n_blocks / n_arrays)``
-        sequential replays per array."""
-        waves = max(1, -(-self.n_blocks(max(1, n_rows)) // self.n_arrays))
+        program over ``n_rows`` costs ``ceil(n_blocks / n_alive)``
+        sequential replays per array (a degraded bank has fewer arrays to
+        deal blocks over, so its waves stretch — the repriced cost model)."""
+        alive = self.n_arrays if self.fault_model is None \
+            else max(1, len(self.fault_model.healthy()))
+        waves = max(1, -(-self.n_blocks(max(1, n_rows)) // alive))
         return {"waves": waves,
                 "compare_cycles": waves * n_compare_cycles,
                 "write_cycles": waves * n_write_cycles}
@@ -186,9 +240,20 @@ class ArrayPool:
         :func:`repro.apc.power.pool_power` uses to place each block's
         traced counters in time."""
         p_ns = self.program_ns(compiled)
+        if self.fault_model is None:
+            healthy = None
+        else:
+            # degraded bank: blocks deal over the surviving arrays only
+            # (array identity preserved).  Retirement mid-run makes this a
+            # post-hoc approximation of where earlier blocks actually ran.
+            healthy = self.healthy_arrays()
         out = []
         for b in range(n_blocks):
-            w, a = divmod(b, self.n_arrays)
+            if healthy is None:
+                w, a = divmod(b, self.n_arrays)
+            else:
+                w, i = divmod(b, len(healthy))
+                a = healthy[i]
             out.append((b, a, w, w * p_ns, (w + 1) * p_ns))
         return out
 
@@ -197,7 +262,8 @@ class ArrayPool:
     def run(self, arr: jax.Array, compiled: CompiledProgram, *,
             collect_stats: bool = False, interpret: bool | None = None,
             kernel_variant: str | None = None, unroll: int | None = None,
-            block_valid: tuple[int, ...] | None = None
+            block_valid: tuple[int, ...] | None = None,
+            radix: int | None = None
             ) -> tuple[jax.Array, TracedStats | None]:
         """Stream [rows, cols] digit rows through the pool.
 
@@ -214,7 +280,16 @@ class ArrayPool:
         compacted to the valid rows (``sum(block_valid)`` rows) — so each
         segment's digits and per-block counters are bit-identical to
         launching it alone.
+
+        ``radix`` declares the program's digit levels for fault
+        verification; it is ignored (and the fault path never taken) when
+        the pool has no fault model installed.
         """
+        if self.fault_model is not None:
+            return self._run_faulty(
+                arr, compiled, collect_stats=collect_stats,
+                interpret=interpret, kernel_variant=kernel_variant,
+                unroll=unroll, block_valid=block_valid, radix=radix)
         n_rows, n_cols = arr.shape
         self.validate(compiled, n_cols=n_cols)
         interpret = self.interpret if interpret is None else interpret
@@ -322,6 +397,155 @@ class ArrayPool:
             traced = TracedStats(jnp.concatenate(counts, axis=0))
         return out, traced
 
+    # -- faulty execution ---------------------------------------------------
+
+    def _run_faulty(self, arr, compiled, *, collect_stats, interpret,
+                    kernel_variant, unroll, block_valid, radix):
+        """:meth:`run` over a bank with an installed fault model.
+
+        Synchronous per-block execution (recovery needs the stored digits
+        on the host anyway): compute each block's intended digits with the
+        kernel, then model the array write — stuck cells + transient flips
+        corrupt what the array stores — and verify the stored block
+        against the write driver's mod-r checksum (the IR-compiled fold,
+        cycles charged) plus digit-range validation.  A failed verify
+        retries on the next healthy array, rotating, up to
+        ``cfg.max_retries`` remaps; arrays crossing ``cfg.retire_after``
+        detections are retired permanently.  Exhausted retries raise
+        :class:`FaultDetected` with the failing (block, array).
+        """
+        fm = self.fault_model
+        r = fm.cfg.radix if radix is None else int(radix)
+        n_rows, n_cols = arr.shape
+        self.validate(compiled, n_cols=n_cols)
+        interpret = self.interpret if interpret is None else interpret
+        unroll = self.unroll if unroll is None else unroll
+        if block_valid is not None:
+            if n_rows == 0 or n_rows % self.rows:
+                raise ValueError(
+                    f"block_valid launches must be whole {self.rows}-row "
+                    f"blocks, got {n_rows} rows")
+            if len(block_valid) != n_rows // self.rows:
+                raise ValueError(
+                    f"block_valid has {len(block_valid)} entries for "
+                    f"{n_rows // self.rows} blocks")
+            if any(not 1 <= v <= self.rows for v in block_valid):
+                raise ValueError(
+                    f"block_valid entries must be in [1, {self.rows}], "
+                    f"got {block_valid}")
+        if n_rows == 0:
+            empty = jnp.zeros((1, 2 + HIST_BINS), jnp.int32)
+            return (jnp.asarray(arr, jnp.int8),
+                    TracedStats(empty) if collect_stats else None)
+        sched, variant, pack = self._device_schedule(compiled,
+                                                     kernel_variant)
+        arr = jnp.asarray(arr, jnp.int8)
+        reg = get_registry()
+        n_blocks = self.n_blocks(n_rows)
+        outs, counts = [], []
+        with trace.span("pool.run_faulty", cat="pool", rows=n_rows,
+                        blocks=n_blocks, variant=variant):
+            for b in range(n_blocks):
+                lo = b * self.rows
+                block = arr[lo:min(lo + self.rows, n_rows)]
+                valid = block.shape[0] if block_valid is None \
+                    else block_valid[b]
+                padded, _ = _pad_rows(block, self.rows)
+                out, raw = tap_run_program(
+                    padded, *sched, jnp.int32(valid), block_rows=self.rows,
+                    collect_stats=collect_stats, hist_bins=HIST_BINS,
+                    interpret=interpret, unroll=unroll, variant=variant,
+                    pack=pack)
+                true_np = np.asarray(out)       # write driver's intent
+                healthy = self.healthy_arrays()
+                base = b % len(healthy)
+                stored = a = None
+                for attempt in range(fm.cfg.max_retries + 1):
+                    healthy = self.healthy_arrays()
+                    a = healthy[(base + attempt) % len(healthy)]
+                    fm.record_write(a, compiled.n_write_cycles)
+                    if attempt:
+                        # a retry replays the whole program on the remap
+                        # target: charge another schedule-static replay
+                        # (per-row set/reset counters are not re-measured
+                        # — a documented approximation)
+                        reg.counter("faults.retries").inc()
+                        zero = TracedStats(
+                            jnp.zeros((1, 2 + HIST_BINS), jnp.int32))
+                        self._charge(zero, compiled, self.rows,
+                                     f"fault_retry:b{b}")
+                        trace.fault("fault_retry", block=b, array=a,
+                                    attempt=attempt)
+                    cand = fm.corrupt(true_np, a, r)
+                    bad = self._verify_block(cand, true_np, valid, r,
+                                             interpret=interpret,
+                                             unroll=unroll)
+                    if bad is None:
+                        stored = cand
+                        break
+                    reg.counter("faults.detected").inc()
+                    trace.fault("fault_detected", block=b, array=a,
+                                rows=len(bad))
+                    if fm.record_detection(a):
+                        reg.counter("faults.retired").inc()
+                        reg.gauge("faults.retired_arrays").set(
+                            len(fm.retired))
+                        trace.fault("array_retired", array=a,
+                                    detections=fm.detections[a])
+                if stored is None:
+                    raise FaultDetected(
+                        f"block {b} failed verification after "
+                        f"{fm.cfg.max_retries + 1} attempts "
+                        f"(last array {a})", block=b, array=a)
+                outs.append(jnp.asarray(stored[:valid]))
+                if collect_stats and raw is not None:
+                    counts.append(raw)
+        reg.counter("pool.launches").inc(n_blocks)
+        out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+        traced = None
+        if collect_stats:
+            traced = TracedStats(jnp.concatenate(counts, axis=0))
+        return out, traced
+
+    def _verify_block(self, stored, true_np, valid, radix, *,
+                      interpret, unroll):
+        """Detection: digit-range validation + mod-r checksum verify of a
+        stored block against the write driver's intent.  Returns None when
+        clean, else the failing row indices.
+
+        The checksum is computed by running the IR-compiled fold
+        (:func:`~repro.apc.lower.compile_checksum`) over the stored block
+        with a spare checksum column appended — so detection costs real
+        compare/write cycles, charged via :meth:`consume_fault_charges`.
+        When the program already uses every pool column there is no spare
+        column; the verify falls back to a host-side sum and counts the
+        fallback."""
+        sv = stored[:valid]
+        oob = (sv < 0) | (sv >= radix)
+        if oob.any():
+            return np.nonzero(oob.any(axis=1))[0]
+        expected = expected_checksum(true_np[:valid], radix)
+        n_cols = stored.shape[1]
+        if n_cols < self.cols:
+            cs_prog = compile_checksum(n_cols, radix)
+            cs_in = np.concatenate(
+                [stored, np.zeros((stored.shape[0], 1), np.int8)], axis=1)
+            sched, variant, pack = self._device_schedule(cs_prog)
+            out, raw = tap_run_program(
+                jnp.asarray(cs_in, jnp.int8), *sched, jnp.int32(valid),
+                block_rows=self.rows, collect_stats=True,
+                hist_bins=HIST_BINS, interpret=interpret, unroll=unroll,
+                variant=variant, pack=pack)
+            got = np.asarray(out)[:valid, n_cols].astype(np.int64)
+            self._charge(TracedStats(raw), cs_prog, self.rows,
+                         "fault_checksum")
+            get_registry().counter("faults.checksum_runs").inc()
+        else:
+            get_registry().counter("faults.checksum_host_fallback").inc()
+            got = sv.astype(np.int64).sum(axis=1) % radix
+        bad = np.nonzero(got != expected)[0]
+        return bad if bad.size else None
+
 
 def run_pooled(arr: jax.Array, compiled: CompiledProgram, pool: ArrayPool,
                *, stats: APStats | None = None,
@@ -339,7 +563,21 @@ def run_pooled(arr: jax.Array, compiled: CompiledProgram, pool: ArrayPool,
                                unroll=unroll)
         if stats is not None:
             accumulate(stats, traced, compiled, n_rows=arr.shape[0])
+        drain_fault_charges(pool, stats)
     return out
+
+
+def drain_fault_charges(pool: ArrayPool | None,
+                        stats: APStats | None) -> None:
+    """Fold the pool's pending fault-handling charges (checksum verifies,
+    retry replays) into ``stats`` — or discard them when no APStats owner
+    exists, so charges can never leak into a later caller's accounting.
+    No-op (and zero-cost) without a fault model."""
+    if pool is None or pool.fault_model is None:
+        return
+    for traced, compiled, n_rows, label in pool.consume_fault_charges():
+        if stats is not None:
+            accumulate(stats, traced, compiled, n_rows=n_rows, label=label)
 
 
 def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
@@ -392,7 +630,22 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
             lambda: encode_weight_digits_jnp(w_dev))
     plane = None
     if resident is not None:
-        plane = resident.resolve()                  # raises if stale/evicted
+        try:
+            plane = resident.resolve()
+        except (ResidentStale, ResidentEvicted):
+            # churn recovery: the plane fell out of the bounded store (or
+            # was re-pinned under the same key) between pin and use —
+            # re-pin from the always-available source weights and go on
+            if pool is None or w_ter is None:
+                raise                       # no source to re-encode from
+            get_registry().counter("resident.repins").inc()
+            trace.instant("resident_repin", cat="pool", key=resident.key)
+            digest = weight_digest(w_ter)
+            w_dev = jnp.asarray(w_ter)
+            resident = pool.resident.pin(
+                resident.key, digest,
+                lambda: encode_weight_digits_jnp(w_dev))
+            plane = resident.resolve()
         rw, kw = plane.shape
         if kw != K or R % rw:
             raise ValueError(
@@ -406,7 +659,8 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
                                    collect_stats=stats is not None,
                                    interpret=interpret,
                                    kernel_variant=kernel_variant,
-                                   unroll=unroll)
+                                   unroll=unroll, radix=radix)
+            drain_fault_charges(pool, stats)
         else:
             out, traced = execute(arr, compiled,
                                   collect_stats=stats is not None,
@@ -448,4 +702,9 @@ def run_mac_tiled(x: jax.Array, w_ter: jax.Array, tiled: TiledMac, *,
                      for p in stage.parts]
             out = _run(fold_stage_input(group), stage.prog, f"reduce{j}")
             carried = out[:, stage.out_lo:stage.out_hi]
+        if pool is not None and pool.fault_model is not None:
+            # decode-time digit-range validation: the last detection line
+            # before corrupted digits would silently decode into values
+            validate_digits(np.asarray(carried), radix,
+                            what="mac accumulator digits")
         return decode_signed_digits_jnp(carried, radix)

@@ -33,9 +33,11 @@ from ..kernels.tap_pass.ops import _pad_rows
 from ..launch.mesh import data_axes
 from . import trace
 from .exec import sharded_program_run
+from .faults import FaultDetected
 from .graph import ProgramGraph, graph_makespan
 from .lower import CompiledProgram
-from .pool import ArrayPool
+from .metrics import get_registry
+from .pool import ArrayPool, drain_fault_charges
 from .stats import HIST_BINS, TracedStats, accumulate
 
 __all__ = ["DevicePool", "Runtime", "GraphResult"]
@@ -53,10 +55,15 @@ class DevicePool(ArrayPool):
     def __init__(self, mesh=None, *, n_arrays: int = 4, rows: int = 4096,
                  cols: int = 256, kernel_variant: str | None = None,
                  interpret: bool | None = None, unroll: int | None = None,
-                 resident_slots: int = 256):
+                 resident_slots: int = 256, faults=None):
         super().__init__(n_arrays=n_arrays, rows=rows, cols=cols,
                          kernel_variant=kernel_variant, interpret=interpret,
-                         unroll=unroll, resident_slots=resident_slots)
+                         unroll=unroll, resident_slots=resident_slots,
+                         faults=faults)
+        if mesh is not None and self.fault_model is not None:
+            raise NotImplementedError(
+                "fault injection runs on the host pool path; the shard_map "
+                "route has no per-block recovery hook yet")
         self.mesh = mesh
         if mesh is None:
             self.axes: tuple[str, ...] = ()
@@ -91,7 +98,8 @@ class DevicePool(ArrayPool):
     def run(self, arr: jax.Array, compiled: CompiledProgram, *,
             collect_stats: bool = False, interpret: bool | None = None,
             kernel_variant: str | None = None, unroll: int | None = None,
-            block_valid: tuple[int, ...] | None = None
+            block_valid: tuple[int, ...] | None = None,
+            radix: int | None = None
             ) -> tuple[jax.Array, TracedStats | None]:
         """Stream [rows, cols] digit rows through the device-spanning bank.
 
@@ -103,7 +111,7 @@ class DevicePool(ArrayPool):
             return super().run(arr, compiled, collect_stats=collect_stats,
                                interpret=interpret,
                                kernel_variant=kernel_variant, unroll=unroll,
-                               block_valid=block_valid)
+                               block_valid=block_valid, radix=radix)
         if block_valid is not None:
             raise NotImplementedError(
                 "row-concatenated (block_valid) launches run on the host "
@@ -226,7 +234,9 @@ class Runtime:
         :func:`~repro.apc.graph.graph_makespan`)."""
         return graph_makespan(graph, n_arrays=self.pool.n_arrays,
                               rows_per_array=self.pool.rows,
-                              n_devices=self.n_devices, record=record)
+                              n_devices=self.n_devices, record=record,
+                              dead_arrays=getattr(self.pool, "dead_arrays",
+                                                  ()))
 
     def run_graph(self, graph: ProgramGraph, *,
                   stats: APStats | None = None,
@@ -296,12 +306,32 @@ class Runtime:
                         # launches of independent nodes in the same
                         # wavefront overlap in flight — the pool's own
                         # double buffering spreads blocks over arrays
-                        out, tr = self.pool.run(
-                            arr, node.compiled, collect_stats=collect,
-                            interpret=self.interpret,
-                            kernel_variant=self.kernel_variant,
-                            unroll=self.unroll,
-                            block_valid=node.block_valid)
+                        fm = getattr(self.pool, "fault_model", None)
+                        attempts = 1 + (fm.cfg.node_retries
+                                        if fm is not None else 0)
+                        for t in range(attempts):
+                            try:
+                                out, tr = self.pool.run(
+                                    arr, node.compiled,
+                                    collect_stats=collect,
+                                    interpret=self.interpret,
+                                    kernel_variant=self.kernel_variant,
+                                    unroll=self.unroll,
+                                    block_valid=node.block_valid,
+                                    radix=graph.radix)
+                                break
+                            except FaultDetected as e:
+                                # re-execute ONLY this node: deps are done
+                                # and their results live; the whole-node
+                                # replay redraws transient faults on a
+                                # (possibly just-degraded) bank
+                                e.node = nid
+                                if t + 1 >= attempts:
+                                    raise
+                                get_registry().counter(
+                                    "faults.node_retries").inc()
+                                trace.fault("node_retry", node=nid,
+                                            attempt=t + 1)
                     results[nid] = node.result(out)
                     traced.append((nid, tr))
                     done.add(nid)
@@ -313,6 +343,7 @@ class Runtime:
                     accumulate(stats, tr, nodes[nid].compiled,
                                n_rows=nodes[nid].rows,
                                label=nodes[nid].label or f"node{nid}")
+            drain_fault_charges(self.pool, stats)
             rec: list = []
             res = GraphResult(results, self.makespan(graph, record=rec),
                               traced=dict(traced) if collect else None,

@@ -537,6 +537,16 @@ def instant(name: str, cat: str | None = None, **args) -> None:
         tr.instant(name, cat=cat, **args)
 
 
+def fault(name: str, **args) -> None:
+    """Fault-path instant (cat="fault"): injection detections, retries,
+    and array retirements on the host timeline — one marker per event so
+    a Perfetto trace of a degraded run shows exactly where and when the
+    bank lost arrays."""
+    tr = current_tracer()
+    if tr is not None:
+        tr.instant(name, cat="fault", **args)
+
+
 def attribute(**counters) -> None:
     """Attribution front door (see :meth:`Tracer.attribute`)."""
     tr = current_tracer()

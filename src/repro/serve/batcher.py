@@ -236,7 +236,8 @@ class AdmissionCfg:
 
 
 def wave_cost_cycles(profiles, *, n_arrays: int, rows_per_array: int,
-                     n_devices: int = 1) -> int:
+                     n_devices: int = 1,
+                     dead_arrays: tuple[int, ...] = ()) -> int:
     """Occupancy-model makespan (cycles) of one wave built from per-request
     step profiles (lists of per-graph-call ``(compiled, rows, deps)`` or
     ``(compiled, rows, deps, upload_cycles)`` node lists — the 4th entry
@@ -252,7 +253,8 @@ def wave_cost_cycles(profiles, *, n_arrays: int, rows_per_array: int,
     if not len(shadow):
         return 0
     rep = graph_makespan(shadow, n_arrays=n_arrays,
-                         rows_per_array=rows_per_array, n_devices=n_devices)
+                         rows_per_array=rows_per_array, n_devices=n_devices,
+                         dead_arrays=dead_arrays)
     return int(rep["makespan_cycles"])
 
 
@@ -359,21 +361,37 @@ class BatchServer:
 
     def submit(self, prompts: np.ndarray, n_new: int,
                cross_embeds=None) -> RequestHandle:
-        """Enqueue one request; returns a :class:`RequestHandle` future."""
+        """Enqueue one request; returns a :class:`RequestHandle` future.
+
+        Raises ``RuntimeError`` once the server is closed or its
+        dispatcher has exited — a handle is only ever returned when the
+        request actually entered the queue, so no caller can block forever
+        on a future nothing will resolve."""
+        if self._closed or not self._dispatcher.is_alive():
+            raise RuntimeError("BatchServer is closed")
         h = RequestHandle(prompts, n_new, cross_embeds)
         try:
             self.queue.put(h)
         except ClosedQueue:
-            h._finish(error=RuntimeError("BatchServer is closed"))
+            raise RuntimeError("BatchServer is closed") from None
         return h
 
     def close(self, wait: bool = True) -> None:
-        """Stop accepting requests; drain in-flight + queued work."""
+        """Stop accepting requests; drain in-flight + queued work.
+
+        ``wait=True`` joins the dispatcher and then FAILS (never strands)
+        any handle that raced into the queue after the dispatcher exited,
+        so ``result()`` on every submitted handle eventually returns or
+        raises."""
         if not self._closed:
             self._closed = True
-            self.queue.close()
+            try:
+                self.queue.close()
+            except ClosedQueue:              # pragma: no cover - benign race
+                pass
         if wait:
             self._dispatcher.join()
+            self._fail_stranded(get_registry())
 
     def __enter__(self) -> "BatchServer":
         return self
@@ -385,21 +403,48 @@ class BatchServer:
 
     def _dispatch(self) -> None:
         reg = get_registry()
+        try:
+            while True:
+                self._drain_submissions(block=not (self._active
+                                                   or self._pending))
+                self._admit(reg)
+                if not self._active:
+                    if self.queue.closed and self.queue.qsize() == 0 \
+                            and not self._pending:
+                        return
+                    if not self._pending:
+                        continue
+                    # pending-but-inadmissible with nothing active cannot
+                    # happen (an empty bank admits); defensive fall-through
+                    continue                 # pragma: no cover
+                self._run_wave(reg)
+                self._retire(reg)
+        finally:
+            # normal drain leaves nothing behind; a crashed dispatcher
+            # must not strand queued/active handles on never-set events
+            self._fail_stranded(reg)
+
+    def _fail_stranded(self, reg) -> None:
+        """Terminal cleanup: fail every handle still queued, pending, or
+        active with a clear error (idempotent; close() re-runs it after
+        join to catch submissions that raced the dispatcher's exit)."""
+        err = RuntimeError(
+            "BatchServer dispatcher exited before this request ran")
         while True:
-            self._drain_submissions(block=not (self._active
-                                               or self._pending))
-            self._admit(reg)
-            if not self._active:
-                if self.queue.closed and self.queue.qsize() == 0 \
-                        and not self._pending:
-                    return
-                if not self._pending:
-                    continue
-                # pending-but-inadmissible with nothing active cannot
-                # happen (an empty bank admits); defensive fall-through
-                continue                     # pragma: no cover
-            self._run_wave(reg)
-            self._retire(reg)
+            try:
+                self._pending.append(self.queue.get(timeout=0))
+            except (StopIteration, _queue.Empty):
+                break
+        for h in self._pending:
+            if not h.done:
+                h._finish(error=err)
+                reg.counter("serve.stranded").inc()
+        self._pending.clear()
+        for act in self._active:
+            if not act.handle.done:
+                act.handle._finish(error=err)
+                reg.counter("serve.stranded").inc()
+        self._active = []
 
     def _drain_submissions(self, block: bool) -> None:
         while True:
@@ -425,7 +470,8 @@ class BatchServer:
         pool = self.engine.ap_ctx.runtime.pool
         cost = wave_cost_cycles(
             profiles, n_arrays=pool.n_arrays, rows_per_array=pool.rows,
-            n_devices=getattr(pool, "n_devices", 1))
+            n_devices=getattr(pool, "n_devices", 1),
+            dead_arrays=getattr(pool, "dead_arrays", ()))
         reg.gauge("serve.admission_wave_cycles").set(cost)
         return cost <= mwc
 
@@ -484,6 +530,12 @@ class BatchServer:
                 merger = WaveMerger(ctx.runtime, len(stepping),
                                     timeout=self.wave_timeout,
                                     track_power=self._track_power)
+                # pre-wave checkpoints: if ANY slot errors, the barrier
+                # breaks and every sibling sees WaveAborted mid-step —
+                # these snapshots are what lets them roll back and re-run
+                # solo instead of dying with the poison request
+                ckpts = [(act.request.checkpoint(),
+                          act.sink.checkpoint()) for act in stepping]
                 threads = [threading.Thread(
                     target=self._step_merged,
                     args=(act, ctx, merger, slot),
@@ -497,6 +549,7 @@ class BatchServer:
                     if act.error is None and merger.profiles[slot]:
                         act.profile = merger.profiles[slot]
                         self._last_profile = act.profile
+                self._recover_errored(reg, ctx, stepping, ckpts)
         wave_ms = 1e3 * (time.perf_counter() - t0)
         reg.histogram("serve.wave_ms").observe(wave_ms)
         self.monitor.observe_wave(
@@ -515,6 +568,44 @@ class BatchServer:
                 act.request.step()
         except BaseException as e:
             act.error = e
+
+    def _recover_errored(self, reg, ctx, stepping, ckpts) -> None:
+        """Wave-abort blast-radius control (poison-request isolation).
+
+        Any act that errored inside a merged wave — its own failure, or
+        :class:`WaveAborted` collateral from a peer breaking the barrier —
+        rolls back to its pre-wave checkpoint and replays the step SOLO on
+        the dispatcher thread via the exact sequential serving path
+        (:func:`~repro.apc.layers.ap_request_scope` with no merger), so
+        recovered siblings keep bit-identical tokens and stats.  Only a
+        request that fails its solo replay too keeps an error on its
+        handle; siblings and subsequent waves continue, on the (possibly
+        degraded) bank."""
+        errored = [(act, ck) for act, ck in zip(stepping, ckpts)
+                   if act.error is not None]
+        if not errored:
+            return
+        reg.counter("serve.wave_aborts").inc()
+        for act, (req_ck, sink_ck) in errored:
+            first = act.error
+            act.request.restore(req_ck)
+            act.sink.restore(sink_ck)
+            act.error = None
+            try:
+                with trace.span("serve.solo_rerun", cat="serve"), \
+                        self.engine.mesh, ap_serving(ctx), \
+                        ap_request_scope(act.sink):
+                    act.request.step()
+            except BaseException as e:
+                # deterministic failure: this is the poison request — it
+                # fails alone (the original wave error is chained for the
+                # handle's traceback)
+                if not isinstance(first, WaveAborted):
+                    e.__cause__ = first
+                act.error = e
+                reg.counter("serve.poisoned").inc()
+            else:
+                reg.counter("serve.solo_reruns").inc()
 
     def _step_merged(self, act: _Active, ctx, merger: WaveMerger,
                      slot: int) -> None:

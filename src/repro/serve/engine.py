@@ -102,6 +102,25 @@ class Request:
     def done(self) -> bool:
         return len(self.out) >= self.n_new
 
+    # everything step() mutates; jax arrays are immutable (rebound, never
+    # written in place), so a shallow snapshot is exact — only the ``out``
+    # list needs copying
+    _STEP_STATE = ("cache", "key", "logits", "tok", "pos", "n_model_steps")
+
+    def checkpoint(self) -> dict:
+        """Snapshot the step-mutable state; the batcher takes one before
+        each merged wave so a request caught in a wave abort can roll back
+        and replay the step solo, bit-identically."""
+        ck = {k: getattr(self, k) for k in self._STEP_STATE}
+        ck["out"] = list(self.out)
+        return ck
+
+    def restore(self, ck: dict) -> None:
+        """Roll back to a :meth:`checkpoint`."""
+        for k in self._STEP_STATE:
+            setattr(self, k, ck[k])
+        self.out = list(ck["out"])
+
     def step(self) -> bool:
         """Advance one model step (+ any sampling it unlocks); True when
         the request has produced all ``n_new`` tokens."""

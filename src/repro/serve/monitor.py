@@ -54,12 +54,33 @@ class ServeMonitor:
     One monitor per :class:`~repro.serve.batcher.BatchServer` (or
     :class:`~repro.serve.engine.Engine`); observations are cheap (a few
     comparisons + registry bumps) and run on the dispatcher thread.
+
+    Fault-tolerance observability: :meth:`status` reports the fault /
+    retry / retirement counters as deltas since this monitor was
+    constructed (the registry is process-global, so a baseline makes each
+    server's view its own) and derives a three-level ``state`` —
+    ``healthy`` / ``degraded`` (faults were absorbed, or arrays retired,
+    while every SLO held) / ``unhealthy`` (SLO breaches).
     """
+
+    # registry counters that describe fault handling, short-named for the
+    # status() faults sub-dict
+    FAULT_COUNTERS = {
+        "faults.detected": "detected",
+        "faults.retries": "retries",
+        "faults.node_retries": "node_retries",
+        "faults.retired": "retired",
+        "serve.wave_aborts": "wave_aborts",
+        "serve.solo_reruns": "solo_reruns",
+        "serve.poisoned": "poisoned",
+        "serve.stranded": "stranded",
+    }
 
     def __init__(self, slo: SLOCfg | None = None,
                  registry: MetricsRegistry | None = None):
         self.slo = slo or SLOCfg()
         self.registry = registry if registry is not None else get_registry()
+        self._fault_base = self.registry.counter_values(self.FAULT_COUNTERS)
         self.started_at = time.time()
         self.n_waves = 0
         self.n_requests = 0
@@ -118,6 +139,13 @@ class ServeMonitor:
         current latency/power snapshot."""
         req = self.registry.histogram("serve.request_ms").snapshot()
         wave = self.registry.histogram("serve.wave_ms").snapshot()
+        faults = self.fault_status()
+        healthy = not (self.latency_breaches or self.p99_breaches
+                       or self.wave_breaches or self.power_breaches)
+        degraded = bool(faults["retired_arrays"] or faults["detected"]
+                        or faults["poisoned"] or faults["stranded"])
+        state = "unhealthy" if not healthy else (
+            "degraded" if degraded else "healthy")
         return {
             "uptime_s": time.time() - self.started_at,
             "n_waves": self.n_waves,
@@ -136,11 +164,25 @@ class ServeMonitor:
             },
             "healthy": not (self.latency_breaches or self.p99_breaches
                             or self.wave_breaches or self.power_breaches),
+            "faults": faults,
+            "degraded": degraded,
+            "state": state,
             "request_ms": req,
             "wave_ms": wave,
             "bank_peak_power_w":
                 self.registry.gauge("serve.bank_peak_power_w").value,
         }
+
+    def fault_status(self) -> dict:
+        """Fault/retry/retirement counter deltas since this monitor's
+        construction, plus the current retired-array count (gauge,
+        absolute)."""
+        cur = self.registry.counter_values(self.FAULT_COUNTERS)
+        out = {short: cur[name] - self._fault_base[name]
+               for name, short in self.FAULT_COUNTERS.items()}
+        out["retired_arrays"] = int(
+            self.registry.gauge("faults.retired_arrays").value)
+        return out
 
     def to_prometheus(self) -> str:
         """Prometheus text exposition of the whole registry (the monitor's

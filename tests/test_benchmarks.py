@@ -268,6 +268,60 @@ def test_apc_bench_json_recorded_ap_serve_rows():
     assert rows[-1]["queued"] >= rows[0]["queued"]
 
 
+@pytest.mark.slow
+def test_bench_ap_faults_point_schema():
+    """One faults_bench sweep point end-to-end: the ap_faults row carries
+    the fault-recovery schema and the accounting balances."""
+    import os
+    bench_dir = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks")
+    sys.path.insert(0, bench_dir)
+    try:
+        from faults_bench import run_fault_point
+    finally:
+        sys.path.remove(bench_dir)
+    row = run_fault_point(1e-3, (), n_requests=2, n_new=2, s_prompt=2)
+    keys = {"bench", "flip_rate", "n_dead", "seed", "n_arrays",
+            "n_requests", "n_new", "achieved_rps", "p50_ms", "p99_ms",
+            "detected", "retries", "checksum_runs", "retired",
+            "surviving_arrays", "wall_s"}
+    assert keys <= set(row)
+    assert row["bench"] == "ap_faults"
+    assert row["achieved_rps"] > 0
+    assert 0 < row["p50_ms"] <= row["p99_ms"]
+    assert row["checksum_runs"] > 0        # verify path really ran
+    assert row["retries"] <= row["detected"]
+    assert row["surviving_arrays"] == \
+        row["n_arrays"] - row["n_dead"] - row["retired"]
+
+
+def test_apc_bench_json_recorded_ap_faults_rows():
+    """The RECORDED benchmarks/apc_bench.json must carry the ap_faults
+    fault-tolerance trajectory (throughput/recovery cost vs fault rate,
+    ending in the degraded-bank point)."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks", "apc_bench.json")
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("ap_faults", [])
+    assert rows, "apc_bench.json is missing the ap_faults trajectory"
+    assert len(rows) >= 3                  # a sweep, not a point
+    for r in rows:
+        assert r["bench"] == "ap_faults"
+        assert r["achieved_rps"] > 0
+        assert 0 < r["p50_ms"] <= r["p99_ms"]
+        assert r["checksum_runs"] > 0
+        assert r["surviving_arrays"] == \
+            r["n_arrays"] - r["n_dead"] - r["retired"]
+    # the sweep spans pristine -> faulty -> degraded bank
+    assert any(r["flip_rate"] == 0 and r["detected"] == 0 for r in rows)
+    assert any(r["flip_rate"] > 0 and r["detected"] > 0 for r in rows)
+    assert any(r["n_dead"] > 0 and r["surviving_arrays"] < r["n_arrays"]
+               for r in rows)
+
+
 # ---------------------------------------------------------------------------
 # perf-regression sentinel
 # ---------------------------------------------------------------------------
@@ -330,6 +384,8 @@ def test_regression_sentinel_smoke_catches_structural_baseline_drift(
         doc = json.load(f)
     doc["ap_pool"][0]["wall_write_cycles"] += 1
     doc["ap_kernel"][0]["pack"] += 1
+    # fault-trajectory invariant: surviving-bank accounting must balance
+    doc["ap_faults"][-1]["surviving_arrays"] += 1
     path = tmp_path / "tampered.json"
     path.write_text(json.dumps(doc))
     assert sent.main(["--smoke", "--json", str(path)]) == 1

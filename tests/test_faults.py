@@ -1,0 +1,723 @@
+"""Fault-tolerant AP execution: injection, detection, recovery.
+
+Acceptance contract (ISSUE 10):
+
+- with faults OFF (no model installed) every path is bit-identical to a
+  pool that never heard of the fault layer — digits, APStats, tokens;
+- with a seeded fault model ON, recovery (block retry/remap, array
+  retirement, node re-execution, poison-request isolation) keeps results
+  bit-identical to the pristine intent while the registry/monitor report
+  what was absorbed;
+- checksum detection runs through the compiled IR so it costs honest
+  compare/write cycles, charged via the pool's fault-charge channel.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import apc
+from repro.apc.faults import (FaultConfig, FaultDetected, FaultModel,
+                              expected_checksum, fault_config_from_env,
+                              faults_enabled, validate_digits)
+from repro.apc.metrics import MetricsRegistry, get_registry
+from repro.core import ap
+
+
+RADIX, W = 3, 4
+COLS = 2 * W + 2          # one spare column for the checksum fold
+
+
+def _stats_equal(a: ap.APStats, b: ap.APStats) -> None:
+    assert (a.sets, a.resets) == (b.sets, b.resets)
+    assert (a.n_compare_cycles, a.n_write_cycles) == \
+        (b.n_compare_cycles, b.n_write_cycles)
+    assert np.array_equal(a.mismatch_hist, b.mismatch_hist)
+
+
+def _add_case(rows=48, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, RADIX ** W, rows)
+    b = rng.integers(0, RADIX ** W, rows)
+    arr = jnp.asarray(ap.encode_operands(a, b, RADIX, W))
+    compiled = apc.compile_named("add", RADIX, W)
+    return arr, compiled
+
+
+def _pool_stats(traced, compiled, rows):
+    st = ap.APStats(radix=RADIX)
+    apc.accumulate(st, traced, compiled, n_rows=rows)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Config + env knobs
+# ---------------------------------------------------------------------------
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError, match="stuck_rate"):
+        FaultConfig(stuck_rate=1.5)
+    with pytest.raises(ValueError, match="flip_rate"):
+        FaultConfig(flip_rate=-0.1)
+    with pytest.raises(ValueError, match="radix"):
+        FaultConfig(radix=1)
+    with pytest.raises(ValueError, match="retry counts"):
+        FaultConfig(max_retries=-1)
+    with pytest.raises(ValueError, match="retire_after"):
+        FaultConfig(retire_after=0)
+    with pytest.raises(ValueError, match="wear_ref"):
+        FaultConfig(wear_ref=0)
+
+
+def test_fault_model_rejects_bad_dead_arrays():
+    with pytest.raises(ValueError, match="outside bank"):
+        FaultModel(FaultConfig(dead_arrays=(4,)), 4, 16, COLS)
+    with pytest.raises(ValueError, match="every array"):
+        FaultModel(FaultConfig(dead_arrays=(0, 1)), 2, 16, COLS)
+
+
+def test_fault_env_knobs(monkeypatch):
+    monkeypatch.delenv("REPRO_AP_FAULTS", raising=False)
+    assert not faults_enabled()
+    for v in ("1", "true", "YES", "on"):
+        monkeypatch.setenv("REPRO_AP_FAULTS", v)
+        assert faults_enabled()
+    monkeypatch.setenv("REPRO_AP_FAULTS", "0")
+    assert not faults_enabled()
+
+    monkeypatch.setenv("REPRO_AP_FAULT_STUCK", "1e-4")
+    monkeypatch.setenv("REPRO_AP_FAULT_FLIP", "2e-3")
+    monkeypatch.setenv("REPRO_AP_FAULT_DEAD", "1,3")
+    monkeypatch.setenv("REPRO_AP_FAULT_SEED", "7")
+    monkeypatch.setenv("REPRO_AP_FAULT_RETRIES", "5")
+    monkeypatch.setenv("REPRO_AP_FAULT_RETIRE_AFTER", "2")
+    cfg = fault_config_from_env()
+    assert cfg.stuck_rate == 1e-4
+    assert cfg.flip_rate == 2e-3
+    assert cfg.dead_arrays == (1, 3)
+    assert cfg.seed == 7
+    assert cfg.max_retries == 5
+    assert cfg.retire_after == 2
+
+
+def test_pool_installs_fault_model_from_env(monkeypatch):
+    monkeypatch.delenv("REPRO_AP_FAULTS", raising=False)
+    assert apc.ArrayPool(n_arrays=2, rows=16, cols=COLS).fault_model is None
+    monkeypatch.setenv("REPRO_AP_FAULTS", "1")
+    monkeypatch.setenv("REPRO_AP_FAULT_STUCK", "1e-4")
+    monkeypatch.setenv("REPRO_AP_FAULT_SEED", "2")
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=COLS)
+    assert pool.fault_model is not None
+    assert pool.fault_model.cfg.stuck_rate == 1e-4
+    assert pool.fault_model.cfg.seed == 2
+    # explicit faults= beats the env
+    explicit = apc.ArrayPool(n_arrays=2, rows=16, cols=COLS,
+                             faults=FaultConfig(stuck_rate=0.5))
+    assert explicit.fault_model.cfg.stuck_rate == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Zero-overhead guarantee (faults off) + honest pricing (model installed)
+# ---------------------------------------------------------------------------
+
+def test_faults_off_bit_identical(monkeypatch):
+    """No fault model: pool.run output + APStats are bit-identical to
+    single-array execute and no fault charges ever accrue."""
+    monkeypatch.delenv("REPRO_AP_FAULTS", raising=False)
+    arr, compiled = _add_case(rows=101)
+    out_e, tr_e = apc.execute(arr, compiled, collect_stats=True)
+    pool = apc.ArrayPool(n_arrays=3, rows=16, cols=COLS)
+    assert pool.fault_model is None
+    out_p, tr_p = pool.run(arr, compiled, collect_stats=True)
+    assert np.array_equal(np.asarray(out_e), np.asarray(out_p))
+    _stats_equal(_pool_stats(tr_e, compiled, 101),
+                 _pool_stats(tr_p, compiled, 101))
+    assert pool.consume_fault_charges() == []
+
+
+def test_zero_rate_model_digits_identical_checksums_priced():
+    """A zero-rate fault model never corrupts (digits bit-identical) but
+    the checksum verify is real work: fault charges accrue per block and
+    drain into the caller's stats."""
+    arr, compiled = _add_case(rows=48)
+    out_e, _ = apc.execute(arr, compiled, collect_stats=True)
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=COLS,
+                         faults=FaultConfig())
+    out_p, tr_p = pool.run(arr, compiled, collect_stats=True,
+                           radix=RADIX)
+    assert np.array_equal(np.asarray(out_e), np.asarray(out_p))
+    charges = pool.consume_fault_charges()
+    assert len(charges) == pool.n_blocks(48)       # one checksum per block
+    assert all(label == "fault_checksum" for _, _, _, label in charges)
+    assert pool.consume_fault_charges() == []      # drained exactly once
+
+    # run_pooled drains the charges into the same APStats it accumulates
+    pristine = ap.APStats(radix=RADIX)
+    apc.accumulate(pristine, tr_p, compiled, n_rows=48)
+    st = ap.APStats(radix=RADIX)
+    apc.run_pooled(arr, compiled, pool, stats=st)
+    assert st.n_write_cycles > pristine.n_write_cycles
+    assert get_registry().counter("faults.checksum_runs").value > 0
+
+
+# ---------------------------------------------------------------------------
+# Recovery: stuck cells, transient flips, dead arrays
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_stuck_at_recovery_bit_exact(seed):
+    """Seeded stuck-at cells: retry/remap recovers the pristine digits."""
+    arr, compiled = _add_case(rows=64, seed=seed)
+    out_e, _ = apc.execute(arr, compiled)
+    pool = apc.ArrayPool(
+        n_arrays=4, rows=16, cols=COLS,
+        faults=FaultConfig(stuck_rate=2e-3, seed=seed))
+    out_p, _ = pool.run(arr, compiled, radix=RADIX)
+    assert np.array_equal(np.asarray(out_e), np.asarray(out_p))
+    pool.consume_fault_charges()
+
+
+def test_flip_recovery_and_determinism():
+    """Transient write flips are redrawn per attempt (a retry on the same
+    array can land clean) and the whole run is deterministic in the
+    seed: two identical pools produce identical digits and fault state."""
+    arr, compiled = _add_case(rows=64, seed=9)
+    out_e, _ = apc.execute(arr, compiled)
+    cfg = FaultConfig(flip_rate=2e-3, seed=7, max_retries=8)
+    snaps = []
+    for _ in range(2):
+        pool = apc.ArrayPool(n_arrays=4, rows=16, cols=COLS, faults=cfg)
+        out_p, _ = pool.run(arr, compiled, radix=RADIX)
+        assert np.array_equal(np.asarray(out_e), np.asarray(out_p))
+        pool.consume_fault_charges()
+        snaps.append(pool.fault_model.snapshot())
+    assert snaps[0] == snaps[1]
+
+
+def test_stuck_map_deterministic_per_array():
+    fm1 = FaultModel(FaultConfig(stuck_rate=0.05, seed=3), 2, 32, COLS)
+    fm2 = FaultModel(FaultConfig(stuck_rate=0.05, seed=3), 2, 32, COLS)
+    m1, v1 = fm1.stuck_cells(0)
+    m2, v2 = fm2.stuck_cells(0)
+    assert np.array_equal(m1, m2) and np.array_equal(v1, v2)
+    m_other, _ = fm1.stuck_cells(1)
+    assert not np.array_equal(m1, m_other)
+    # stuck values may sit between levels (== radix, out of range)
+    assert v1.min() >= 0 and v1.max() <= RADIX
+
+
+def test_dead_arrays_recovery_and_repricing():
+    """Whole-array failure at construction: digits still pristine, and
+    the occupancy model reprices over the surviving bank."""
+    arr, compiled = _add_case(rows=70, seed=4)
+    out_e, _ = apc.execute(arr, compiled)
+    pool = apc.ArrayPool(n_arrays=4, rows=16, cols=COLS,
+                         faults=FaultConfig(dead_arrays=(1,)))
+    assert pool.dead_arrays == (1,)
+    assert pool.healthy_arrays() == [0, 2, 3]
+    out_p, _ = pool.run(arr, compiled, radix=RADIX)
+    assert np.array_equal(np.asarray(out_e), np.asarray(out_p))
+    pool.consume_fault_charges()
+    # waves price over the 3 survivors, not the nominal 4-array bank:
+    # 6 blocks / 3 alive = 2 waves, 7 blocks / 3 alive = 3 waves (a
+    # pristine bank would fit 7 blocks in 2 waves)
+    cc, wc = compiled.n_compare_cycles, compiled.n_write_cycles
+    assert pool.wall_cycles(5 * 16, cc, wc)["waves"] == 2
+    assert pool.wall_cycles(6 * 16, cc, wc)["waves"] == 2
+    assert pool.wall_cycles(7 * 16, cc, wc)["waves"] == 3
+    # block placement never lands on the dead array
+    arrays = {a for _, a, _, _, _ in pool.block_intervals(6, compiled)}
+    assert arrays == {0, 2, 3}
+
+
+def test_retirement_crosses_threshold():
+    fm = FaultModel(FaultConfig(retire_after=2), 3, 16, COLS)
+    assert fm.record_detection(1) is False
+    assert fm.record_detection(1) is True          # crossed retire_after
+    assert fm.retired == {1}
+    assert fm.healthy() == [0, 2]
+    assert fm.record_detection(1) is False         # already retired
+    snap = fm.snapshot()
+    assert snap["retired"] == [1] and snap["surviving"] == 2
+
+
+def test_every_array_retired_raises():
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=COLS,
+                         faults=FaultConfig())
+    pool.fault_model.retire(0)
+    pool.fault_model.retire(1)
+    with pytest.raises(FaultDetected, match="every array"):
+        pool.healthy_arrays()
+
+
+def test_exhausted_retries_raise_with_coordinates():
+    """Stuck cells so dense that no remap can absorb them: the pool gives
+    up with the failing (block, array) attached."""
+    arr, compiled = _add_case(rows=32, seed=5)
+    pool = apc.ArrayPool(
+        n_arrays=2, rows=16, cols=COLS,
+        faults=FaultConfig(stuck_rate=0.3, seed=0, max_retries=1))
+    with pytest.raises(FaultDetected) as ei:
+        pool.run(arr, compiled, radix=RADIX)
+    assert ei.value.block is not None
+    assert ei.value.array is not None
+    pool.consume_fault_charges()
+
+
+def test_wear_accelerates_flip_rate():
+    fm = FaultModel(FaultConfig(flip_rate=1e-3, wear_ref=1000), 2, 16,
+                    COLS)
+    assert fm.flip_rate(0) == pytest.approx(1e-3)
+    fm.record_write(0, 3000)
+    assert fm.flip_rate(0) == pytest.approx(4e-3)
+    assert fm.flip_rate(1) == pytest.approx(1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Detection: checksum + digit-range validation
+# ---------------------------------------------------------------------------
+
+def test_expected_checksum_catches_any_single_cell_delta():
+    rng = np.random.default_rng(0)
+    true = rng.integers(0, RADIX, (8, 9)).astype(np.int8)
+    cs = expected_checksum(true, RADIX)
+    for r in range(true.shape[0]):
+        for delta in range(1, RADIX):
+            bad = true.copy()
+            bad[r, 3] = (bad[r, 3] + delta) % RADIX
+            got = expected_checksum(bad, RADIX)
+            assert got[r] != cs[r]
+            assert np.array_equal(np.delete(got, r), np.delete(cs, r))
+
+
+def test_compiled_checksum_program_matches_host():
+    """The IR-compiled mod-r fold writes row-sum-mod-r into the spare
+    column — same answer as the host checksum, priced in real cycles."""
+    from repro.apc.lower import compile_checksum
+    rng = np.random.default_rng(1)
+    digits = rng.integers(0, RADIX, (16, 9)).astype(np.int8)
+    prog = compile_checksum(9, RADIX)
+    assert prog.n_compare_cycles > 0 and prog.n_write_cycles > 0
+    arr = jnp.asarray(np.concatenate(
+        [digits, np.zeros((16, 1), np.int8)], axis=1))
+    out, _ = apc.execute(arr, prog)
+    got = np.asarray(out)[:, 9]
+    assert np.array_equal(got, expected_checksum(digits, RADIX))
+
+
+def test_checksum_cache_registered_and_bounded():
+    from repro.apc import caches
+    reg = caches.registry()
+    assert "compile_checksum" in reg
+    assert reg["compile_checksum"].cache_info().maxsize is not None
+
+
+def test_validate_digits():
+    validate_digits(np.array([[0, 1, 2]]), RADIX)    # in range: no raise
+    with pytest.raises(FaultDetected, match="outside"):
+        validate_digits(np.array([[0, 1, RADIX]]), RADIX)
+    with pytest.raises(FaultDetected, match="stuck probe"):
+        validate_digits(np.array([[-1, 0, 1]]), RADIX, what="stuck probe")
+
+
+def test_mac_tiled_recovers_under_stuck_faults():
+    """End-to-end MAC over a faulty bank: signed dot products still exact
+    (checksum verify + decode-time range validation on the path)."""
+    radix, K, max_abs = 3, 7, 3
+    width = apc.mac_acc_width(radix, K, max_abs)
+    tiled = apc.compile_mac_tiled(radix, K, width, 3)
+    cols = max(tiled.min_cols, 2 * width + 1) + 1   # spare checksum col
+    rng = np.random.default_rng(6)
+    x = rng.integers(-max_abs, max_abs + 1, (24, K))
+    w = rng.integers(-1, 2, (24, K))
+    pool = apc.ArrayPool(n_arrays=4, rows=8, cols=cols,
+                         faults=FaultConfig(stuck_rate=2e-3, seed=1))
+    st = ap.APStats(radix=radix)
+    acc = apc.run_mac_tiled(jnp.asarray(x, jnp.int32),
+                            jnp.asarray(w, jnp.int8), tiled, pool=pool,
+                            stats=st)
+    assert np.array_equal(np.asarray(acc), (x * w).sum(axis=1))
+    assert st.n_write_cycles > 0
+    assert pool.consume_fault_charges() == []       # drained into st
+
+
+# ---------------------------------------------------------------------------
+# Runtime: node-level re-execution + degraded makespan
+# ---------------------------------------------------------------------------
+
+def test_runtime_node_retry_recovers(monkeypatch):
+    arr, compiled = _add_case(rows=32, seed=2)
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=COLS,
+                         faults=FaultConfig(node_retries=1))
+    rt = apc.Runtime(pool)
+    g = apc.ProgramGraph()
+    g.add(compiled, rows=32, build=lambda: arr, label="add")
+    calls = {"n": 0}
+    real_run = pool.run
+
+    def flaky_run(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise FaultDetected("injected", block=0, array=0)
+        return real_run(*a, **kw)
+
+    monkeypatch.setattr(pool, "run", flaky_run)
+    base = get_registry().counter("faults.node_retries").value
+    res = rt.run_graph(g)
+    out_e, _ = apc.execute(arr, compiled)
+    assert np.array_equal(np.asarray(res[0]), np.asarray(out_e))
+    assert calls["n"] == 2
+    assert get_registry().counter("faults.node_retries").value == base + 1
+
+
+def test_runtime_node_retry_exhaustion_names_node(monkeypatch):
+    arr, compiled = _add_case(rows=16, seed=2)
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=COLS,
+                         faults=FaultConfig(node_retries=1))
+    rt = apc.Runtime(pool)
+    g = apc.ProgramGraph()
+    g.add(compiled, rows=16, build=lambda: arr, label="add")
+
+    def always_fail(*a, **kw):
+        raise FaultDetected("injected", block=0, array=1)
+
+    monkeypatch.setattr(pool, "run", always_fail)
+    with pytest.raises(FaultDetected) as ei:
+        rt.run_graph(g)
+    assert ei.value.node == 0
+
+
+def test_graph_makespan_reprices_dead_arrays():
+    from repro.apc.graph import graph_makespan
+    arr, compiled = _add_case(rows=64, seed=3)
+    g = apc.ProgramGraph()
+    g.add(compiled, rows=64, build=lambda: arr, label="add")
+    full = graph_makespan(g, n_arrays=4, rows_per_array=16)
+    degraded = graph_makespan(g, n_arrays=4, rows_per_array=16,
+                              dead_arrays=(1, 2))
+    assert full["n_arrays_alive"] == 4
+    assert degraded["n_arrays_alive"] == 2
+    assert degraded["makespan_cycles"] > full["makespan_cycles"]
+    assert degraded["sequential_cycles"] >= full["sequential_cycles"]
+    with pytest.raises(ValueError, match="retired"):
+        graph_makespan(g, n_arrays=2, rows_per_array=16,
+                       dead_arrays=(0, 1))
+    record = []
+    graph_makespan(g, n_arrays=4, rows_per_array=16, dead_arrays=(1, 2),
+                   record=record)
+    assert {e["array"] for e in record} <= {0, 3}
+
+
+def test_device_pool_rejects_faults_on_mesh():
+    import jax as _jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(_jax.devices()[:1]).reshape(1), ("model",))
+    with pytest.raises(NotImplementedError, match="host pool"):
+        apc.DevicePool(mesh, n_arrays=2, rows=16, cols=COLS,
+                       faults=FaultConfig())
+
+
+# ---------------------------------------------------------------------------
+# Resident-store recovery under churn
+# ---------------------------------------------------------------------------
+
+def test_resident_evicted_handle_repins_and_recovers():
+    from repro.apc.mac import encode_weight_digits_jnp, weight_digest
+    radix, K, max_abs = 3, 6, 3
+    width = apc.mac_acc_width(radix, K, max_abs)
+    tiled = apc.compile_mac_tiled(radix, K, width, 3)
+    cols = max(tiled.min_cols, 2 * width + 1)
+    rng = np.random.default_rng(8)
+    x = rng.integers(-max_abs, max_abs + 1, (16, K))
+    w = rng.integers(-1, 2, (16, K))
+    w_dev = jnp.asarray(w, jnp.int8)
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=cols)
+    digest = weight_digest(w_dev)
+    handle = pool.resident.pin("wts", digest,
+                               lambda: encode_weight_digits_jnp(w_dev))
+    pool.resident.clear()                  # churn: plane evicted mid-serve
+    base = get_registry().counter("resident.repins").value
+    acc = apc.run_mac_tiled(jnp.asarray(x, jnp.int32), w_dev, tiled,
+                            pool=pool, resident=handle)
+    assert np.array_equal(np.asarray(acc), (x * w).sum(axis=1))
+    assert get_registry().counter("resident.repins").value == base + 1
+    assert pool.resident.get("wts") is not None    # re-pinned in place
+
+
+def test_resident_stale_handle_repins_and_recovers():
+    from repro.apc.caches import ResidentStale
+    from repro.apc.mac import encode_weight_digits_jnp, weight_digest
+    radix, K, max_abs = 3, 6, 3
+    width = apc.mac_acc_width(radix, K, max_abs)
+    tiled = apc.compile_mac_tiled(radix, K, width, 3)
+    cols = max(tiled.min_cols, 2 * width + 1)
+    rng = np.random.default_rng(9)
+    x = rng.integers(-max_abs, max_abs + 1, (16, K))
+    w = rng.integers(-1, 2, (16, K))
+    w_dev = jnp.asarray(w, jnp.int8)
+    other = jnp.asarray(rng.integers(-1, 2, (16, K)), jnp.int8)
+    pool = apc.ArrayPool(n_arrays=2, rows=16, cols=cols)
+    handle = pool.resident.pin("wts", weight_digest(w_dev),
+                               lambda: encode_weight_digits_jnp(w_dev))
+    # same key re-pinned with different content: handle goes stale
+    pool.resident.pin("wts", weight_digest(other),
+                      lambda: encode_weight_digits_jnp(other))
+    with pytest.raises(ResidentStale):
+        handle.resolve()
+    acc = apc.run_mac_tiled(jnp.asarray(x, jnp.int32), w_dev, tiled,
+                            pool=pool, resident=handle)
+    assert np.array_equal(np.asarray(acc), (x * w).sum(axis=1))
+    # without a source to re-encode from, the stale handle still raises
+    with pytest.raises(ResidentStale):
+        apc.run_mac_tiled(jnp.asarray(x, jnp.int32), w_dev, tiled,
+                          pool=None, resident=handle,
+                          block_rows=16)
+
+
+# ---------------------------------------------------------------------------
+# Monitor + metrics surface
+# ---------------------------------------------------------------------------
+
+def test_monitor_fault_status_deltas_and_state():
+    from repro.serve.monitor import ServeMonitor
+    reg = MetricsRegistry()
+    reg.counter("faults.detected").inc(5)           # pre-existing history
+    mon = ServeMonitor(registry=reg)
+    st = mon.status()
+    assert st["faults"]["detected"] == 0            # baseline subtracted
+    assert st["state"] == "healthy" and not st["degraded"]
+    reg.counter("faults.detected").inc(2)
+    reg.counter("faults.retries").inc(3)
+    reg.gauge("faults.retired_arrays").set(1)
+    st = mon.status()
+    assert st["faults"]["detected"] == 2
+    assert st["faults"]["retries"] == 3
+    assert st["faults"]["retired_arrays"] == 1
+    assert st["degraded"] and st["state"] == "degraded"
+    assert st["healthy"]                            # SLOs still green
+    text = reg.to_prometheus()
+    assert "faults_detected_total 7" in text
+    assert "faults_retired_arrays 1.0" in text
+
+
+def test_monitor_poisoned_and_stranded_degrade():
+    from repro.serve.monitor import ServeMonitor
+    reg = MetricsRegistry()
+    mon = ServeMonitor(registry=reg)
+    reg.counter("serve.poisoned").inc()
+    assert mon.status()["state"] == "degraded"
+    reg2 = MetricsRegistry()
+    mon2 = ServeMonitor(registry=reg2)
+    reg2.counter("serve.stranded").inc()
+    assert mon2.status()["state"] == "degraded"
+
+
+def test_counter_values_creates_missing():
+    reg = MetricsRegistry()
+    vals = reg.counter_values(["a.b", "c.d"])
+    assert vals == {"a.b": 0, "c.d": 0}
+    reg.counter("a.b").inc(4)
+    assert reg.counter_values(["a.b"])["a.b"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Serve path: poison isolation, close races, churn under concurrency
+# ---------------------------------------------------------------------------
+
+def _tiny_engine(**kw):
+    from tests.test_serve import _tiny_engine as make
+    return make(**kw)
+
+
+def test_request_handle_timeout_on_abandoned_handle():
+    from repro.serve.batcher import RequestHandle
+    h = RequestHandle(np.array([[1]], dtype=np.int32), 1)
+    with pytest.raises(TimeoutError):
+        h.result(timeout=0.05)
+    with pytest.raises(TimeoutError):
+        h.ap_report(timeout=0.05)
+
+
+@pytest.mark.slow
+def test_serve_poison_request_isolated_siblings_bit_exact():
+    """One poisoned request in a 4-wide wave fails ALONE; its siblings
+    transparently re-run solo from their checkpoints and return tokens +
+    APStats bit-identical to sequential single-request serving."""
+    from repro.serve.batcher import AdmissionCfg, BatchServer
+    POISON = 31
+    n_new = 3
+    prompts = [np.array([[1 + i, 2 + i, 3 + i]], dtype=np.int32)
+               for i in range(3)]
+    poison_prompt = np.array([[POISON, 2, 3]], dtype=np.int32)
+
+    seq_eng = _tiny_engine()
+    seq = []
+    for p in prompts:
+        toks = seq_eng.generate(p, n_new)
+        seq.append((np.asarray(toks), seq_eng.ap_report()))
+
+    reg = get_registry()
+    base = reg.counter_values(["serve.wave_aborts", "serve.solo_reruns",
+                               "serve.poisoned"])
+    eng = _tiny_engine()
+    orig_new_request = eng.new_request
+
+    def poisoned_new_request(prompt, *a, **kw):
+        req = orig_new_request(prompt, *a, **kw)
+        if int(np.asarray(prompt)[0, 0]) == POISON:
+            def bad_step(*sa, **skw):
+                raise RuntimeError("injected poison step")
+            req.step = bad_step
+        return req
+
+    eng.new_request = poisoned_new_request
+    with BatchServer(eng, admission=AdmissionCfg(max_inflight=8)) as srv:
+        handles = [srv.submit(p, n_new) for p in prompts]
+        ph = srv.submit(poison_prompt, n_new)
+        results = [(h.result(timeout=600), h.ap_report()) for h in handles]
+        with pytest.raises(RuntimeError, match="injected poison step"):
+            ph.result(timeout=600)
+        status = srv.monitor.status()
+    assert srv.n_waves > 0
+
+    for (bt, br), (st, sr) in zip(results, seq):
+        assert np.array_equal(bt, st)
+        for key in ("sets", "resets", "compare_cycles", "write_cycles",
+                    "energy_total_j", "n_graphs", "n_programs",
+                    "makespan_cycles", "sequential_cycles"):
+            assert br[key] == sr[key], key
+
+    delta = {k: reg.counter_values(base)[k] - base[k] for k in base}
+    assert delta["serve.wave_aborts"] >= 1
+    assert delta["serve.solo_reruns"] >= 1
+    assert delta["serve.poisoned"] >= 1
+    assert status["state"] == "degraded"
+    assert status["faults"]["poisoned"] >= 1
+
+
+@pytest.mark.slow
+def test_serve_fault_injection_parity_on_degraded_bank():
+    """Seeded stuck-at faults on BOTH engines (the CI faults-shard
+    scenario): recovery keeps batched tokens == sequential tokens while
+    arrays retire underneath."""
+    from repro.serve.batcher import AdmissionCfg, BatchServer
+    n_new = 3
+    prompts = [np.array([[1 + i, 2 + i, 3 + i]], dtype=np.int32)
+               for i in range(4)]
+    cfg = FaultConfig(stuck_rate=1e-4, seed=2)
+
+    def faulty_engine():
+        eng = _tiny_engine()
+        pool = eng.ap_ctx.runtime.pool
+        pool.fault_model = FaultModel(cfg, pool.n_arrays, pool.rows,
+                                      pool.cols)
+        return eng
+
+    seq_eng = faulty_engine()
+    seq = [np.asarray(seq_eng.generate(p, n_new)) for p in prompts]
+
+    eng = faulty_engine()
+    with BatchServer(eng, admission=AdmissionCfg(max_inflight=8)) as srv:
+        handles = [srv.submit(p, n_new) for p in prompts]
+        results = [h.result(timeout=600) for h in handles]
+    for bt, st in zip(results, seq):
+        assert np.array_equal(bt, st)
+    # this seed is chosen to actually exercise the recovery machinery
+    fm = eng.ap_ctx.runtime.pool.fault_model
+    assert sum(fm.detections) > 0
+    assert len(fm.retired) > 0
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not faults_enabled(),
+                    reason="runs only under REPRO_AP_FAULTS=1 (the CI "
+                           "faults shard sets a nonzero stuck rate)")
+def test_serve_env_faults_tokens_parity():
+    """CI faults-shard gate: with the fault model installed from the
+    ENVIRONMENT (REPRO_AP_FAULTS=1 + REPRO_AP_FAULT_STUCK/SEED), batched
+    serving tokens == sequential tokens on the faulty bank.
+
+    Tokens only: merged-wave checksum charges are drained per wave rather
+    than attributed per request, so APStats parity is a fault-free
+    guarantee (see test_batched_serving_bit_identical_to_sequential)."""
+    from repro.serve.batcher import AdmissionCfg, BatchServer
+    n_new = 3
+    prompts = [np.array([[1 + i, 2 + i, 3 + i]], dtype=np.int32)
+               for i in range(4)]
+    seq_eng = _tiny_engine()
+    assert seq_eng.ap_ctx.runtime.pool.fault_model is not None, \
+        "pool did not install the env fault config"
+    seq = [np.asarray(seq_eng.generate(p, n_new)) for p in prompts]
+
+    eng = _tiny_engine()
+    with BatchServer(eng, admission=AdmissionCfg(max_inflight=8)) as srv:
+        handles = [srv.submit(p, n_new) for p in prompts]
+        results = [h.result(timeout=600) for h in handles]
+    for bt, st in zip(results, seq):
+        assert np.array_equal(bt, st)
+
+
+@pytest.mark.slow
+def test_batch_server_close_races_and_stranded_handles():
+    """Dispatcher death strands nothing: pending handles fail with a
+    clear error (no hang), close(wait=True) returns, and submit after
+    close raises instead of silently enqueueing."""
+    from repro.serve.batcher import AdmissionCfg, BatchServer
+    eng = _tiny_engine()
+    reg = get_registry()
+    base = reg.counter("serve.stranded").value
+    srv = BatchServer(eng, admission=AdmissionCfg(max_inflight=4))
+
+    def boom(*a, **kw):
+        raise OSError("injected dispatcher crash")
+
+    srv._run_wave = boom
+    h = srv.submit(np.array([[1, 2]], dtype=np.int32), 2)
+    with pytest.raises(RuntimeError, match="dispatcher exited"):
+        h.result(timeout=60)
+    assert reg.counter("serve.stranded").value > base
+
+    t0 = time.perf_counter()
+    srv.close(wait=True)                       # must not hang
+    assert time.perf_counter() - t0 < 30
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(np.array([[1, 2]], dtype=np.int32), 2)
+
+
+@pytest.mark.slow
+def test_serve_resident_churn_repins_bit_exact(monkeypatch):
+    """Weight-stationary serving with the resident store thrashed by a
+    concurrent evictor: requests still complete bit-identically."""
+    from repro.serve.batcher import AdmissionCfg, BatchServer
+    monkeypatch.setenv("REPRO_AP_RESIDENT", "1")
+    n_new = 2
+    prompts = [np.array([[1 + i, 2 + i, 3 + i]], dtype=np.int32)
+               for i in range(2)]
+    seq_eng = _tiny_engine()
+    seq = [np.asarray(seq_eng.generate(p, n_new)) for p in prompts]
+
+    eng = _tiny_engine()
+    store = eng.ap_ctx.runtime.pool.resident
+    stop = threading.Event()
+
+    def churn():
+        while not stop.is_set():
+            store.clear()
+            time.sleep(0.002)
+
+    t = threading.Thread(target=churn, daemon=True)
+    t.start()
+    try:
+        with BatchServer(eng, admission=AdmissionCfg(max_inflight=4)) \
+                as srv:
+            handles = [srv.submit(p, n_new) for p in prompts]
+            results = [h.result(timeout=600) for h in handles]
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    for bt, st in zip(results, seq):
+        assert np.array_equal(bt, st)

@@ -431,10 +431,8 @@ def test_batch_server_queue_drain_under_concurrent_submitters():
     for h in handles:
         toks = h.result(timeout=10)        # already done after close()
         assert toks.shape == (1, 2)
-    from repro.serve.queue import ClosedQueue  # noqa: F401
-    late = srv.submit(np.array([[1, 2]], dtype=np.int32), 1)
     with pytest.raises(RuntimeError, match="closed"):
-        late.result(timeout=10)
+        srv.submit(np.array([[1, 2]], dtype=np.int32), 1)
 
 
 @pytest.mark.slow
